@@ -1,0 +1,64 @@
+"""Shared helpers for the per-figure benchmarks."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.latency_model import table1_model
+from repro.serving.request import Request
+from repro.serving.simulator import (ClusterSpec, Simulator, make_policy,
+                                     summarize)
+from repro.serving.workload import make_trace
+
+MODEL = table1_model()
+TTFT_SLO_SCALE = 25.0      # paper: results normalised to 25x light-load
+
+
+def clone(reqs):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    output_len=r.output_len) for r in reqs]
+
+
+def run_policy(policy: str, trace: str, rate: float, duration: float = 120.0,
+               seed: int = 0, spec_kw: dict | None = None,
+               rate_fn=None) -> dict:
+    # paper-like geometry: 4 nodes of 8 GPUs, P:D 1:1 -> 16 prefill
+    # instances (TP=1) + 2 decode instances (TP=8)
+    kw = dict(n_prefill=16, n_decode=2)
+    kw.update(spec_kw or {})
+    kw["disaggregated"] = (policy != "loongserve")
+    spec = ClusterSpec(**kw)
+    sim = Simulator(spec, make_policy(policy, MODEL, spec, rate_fn=rate_fn))
+    reqs = make_trace(trace, rate, duration, seed=seed)
+    out = sim.run(clone(reqs))
+    s = summarize(out)
+    s["rate"] = rate
+    s["policy"] = policy
+    s["trace"] = trace
+    return s
+
+
+def light_load_ttft(policy: str, trace: str, seed: int = 0) -> float:
+    return run_policy(policy, trace, rate=0.2, duration=200, seed=seed
+                      )["ttft_p99"]
+
+
+def max_sustainable_rate(policy: str, trace: str, slo: float,
+                         rates, duration: float = 120.0,
+                         seed: int = 0) -> float:
+    """Largest swept rate whose P99 TTFT stays under the SLO."""
+    best = 0.0
+    for r in rates:
+        s = run_policy(policy, trace, r, duration, seed)
+        if s["ttft_p99"] <= slo:
+            best = r
+        else:
+            break
+    return best
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,28 @@
+"""Fig. 10: throughput under TTFT constraints at critical rates."""
+
+import time
+
+from common import fmt_row, run_policy
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    trace = "short"
+    rate = 3.0 if quick else 4.0
+    dur = 90 if quick else 180
+    rows = []
+    res = {}
+    for pol in ["tetris", "loongserve", "loongserve_disagg", "fixed_sp_8"]:
+        s = run_policy(pol, trace, rate, dur)
+        res[pol] = s
+        print(f"  {pol:20s} throughput {s['throughput_tok_s']:8.1f} tok/s "
+              f"(p99 TTFT {s['ttft_p99']:.2f}s)")
+    gain = res["tetris"]["throughput_tok_s"] / \
+        res["loongserve"]["throughput_tok_s"]
+    rows.append(fmt_row("fig10.tetris_over_loongserve",
+                        (time.perf_counter() - t0) * 1e6, f"{gain:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

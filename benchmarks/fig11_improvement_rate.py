@@ -1,0 +1,83 @@
+"""Figs. 11-12: improvement-rate sensitivity vs load + dynamic adjustment.
+
+Paper structure: low load -> small rates win (aggressive SP expansion cuts
+prefill time); high load -> large rates win (queueing dominates, expansion
+hurts); saturation -> insensitive.  The dynamic controller must track the
+per-load optimum within a few percent.
+"""
+
+import time
+
+import numpy as np
+
+from common import MODEL, fmt_row, run_policy
+from repro.core.improvement_rate import (DEFAULT_RATES,
+                                         profile_improvement_rates)
+from repro.serving.simulator import ClusterSpec
+
+RATES = (0.1, 0.3, 0.5, 0.7)
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    trace = "medium"
+    loads = (1.0, 3.0) if quick else (0.5, 2.0, 3.5, 5.0)
+    dur = 90 if quick else 150
+    rows = []
+    best_by_load = {}
+    for load in loads:
+        vals = {}
+        for ir in RATES:
+            s = run_policy("tetris", trace, load, dur,
+                           rate_fn=lambda now, ir=ir: ir)
+            vals[ir] = s["ttft_mean"]
+        best = min(vals, key=vals.get)
+        best_by_load[load] = best
+        norm = {k: v / vals[best] for k, v in vals.items()}
+        print(f"load {load:4.1f} req/s: " +
+              " ".join(f"ir={k}:{norm[k]:.2f}" for k in RATES) +
+              f"  best={best}")
+    # optimum must not decrease with load (paper's monotone story)
+    bests = [best_by_load[l] for l in loads]
+    monotone = all(a <= b + 1e-9 for a, b in zip(bests, bests[1:]))
+    # offline profiler table (the simulator-based search of Sec. 5.1/6)
+    spec = ClusterSpec(n_prefill=16, n_decode=2)
+    table = profile_improvement_rates(MODEL, spec, trace,
+                                      arrival_rates=loads,
+                                      improvement_rates=RATES,
+                                      duration=60 if quick else 120)
+    print(f"profiled optimal rates: {table}")
+
+    # dynamic controller vs best fixed rate at a mid load (paper normalises
+    # results to the dynamic-rate configuration)
+    from repro.core.improvement_rate import DynamicRateController
+    from repro.serving.simulator import (DynamicTetrisPolicy, Simulator,
+                                         summarize)
+    from repro.serving.workload import make_trace
+    from common import clone
+    mid = loads[len(loads) // 2]
+    reqs = make_trace(trace, mid, 90 if quick else 150, seed=0)
+    pol = DynamicTetrisPolicy(MODEL, spec,
+                              DynamicRateController(table, window=30.0))
+    dyn = summarize(Simulator(spec, pol).run(clone(reqs)))["ttft_mean"]
+    fixed_best = min(
+        run_policy("tetris", trace, mid, 90 if quick else 150,
+                   rate_fn=lambda now, ir=ir: ir)["ttft_mean"]
+        for ir in RATES)
+    ratio = dyn / fixed_best
+    print(f"dynamic controller vs best fixed at load {mid}: {ratio:.2f}x")
+
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(fmt_row("fig11.best_rate_monotone_in_load", us,
+                        str(monotone)))
+    rows.append(fmt_row("fig11.best_rate_low_load", us,
+                        str(bests[0])))
+    rows.append(fmt_row("fig11.best_rate_high_load", us,
+                        str(bests[-1])))
+    rows.append(fmt_row("fig11.dynamic_over_best_fixed", us,
+                        f"{ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Fig. 13: TTFT slowdown of single-chunk scheduling vs CDSP chunking.
+
+Paper: single-chunk (Algorithm 2 only) suffers up to 2.3-4.8x higher TTFT at
+mid-to-high loads; gains shrink at light load (little fragmentation to
+exploit) and at saturation (queueing dominates).
+"""
+
+import time
+
+from common import fmt_row, run_policy
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    trace = "medium"                     # gains peak near the capacity knee
+    loads = (2.0, 3.0) if quick else (1.0, 2.0, 2.5, 3.0, 3.5)
+    dur = 90 if quick else 150
+    worst50 = worst99 = 1.0
+    for load in loads:
+        tet = run_policy("tetris", trace, load, dur)
+        sc = run_policy("single_chunk", trace, load, dur)
+        r50 = sc["ttft_p50"] / tet["ttft_p50"]
+        r99 = sc["ttft_p99"] / tet["ttft_p99"]
+        worst50, worst99 = max(worst50, r50), max(worst99, r99)
+        print(f"load {load:4.1f}: single-chunk slowdown "
+              f"p50 {r50:.2f}x  p99 {r99:.2f}x")
+    us = (time.perf_counter() - t0) * 1e6
+    return [fmt_row("fig13.single_chunk_p50_slowdown_max", us,
+                    f"{worst50:.2f}"),
+            fmt_row("fig13.single_chunk_p99_slowdown_max", us,
+                    f"{worst99:.2f}")]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

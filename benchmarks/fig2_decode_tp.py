@@ -1,0 +1,36 @@
+"""Fig. 2: decode latency vs TP size, and SP-vs-TP at equal chip budget.
+
+Reproduces the calibrated multipliers: small TP inflates decode latency up
+to ~5.7x; at a fixed 8-chip budget, (SP8,TP1) is ~1.8x worse than (SP1,TP8)
+— the justification for disaggregated large-TP decode instances.
+"""
+
+import time
+
+from common import fmt_row
+from repro.core.latency_model import DecodeLatencyModel
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    m = DecodeLatencyModel()
+    base = m.latency(batch=8, cache_tokens=8 * 32768, sp=1, tp=8)
+    print("decode step latency (batch=8, 32k ctx each), 8-chip budget:")
+    rows = []
+    for sp, tp in [(1, 8), (2, 4), (4, 2), (8, 1)]:
+        lat = m.latency(batch=8, cache_tokens=8 * 32768, sp=sp, tp=tp)
+        print(f"  SP{sp} x TP{tp}: {lat*1e3:6.2f} ms  ({lat/base:.2f}x)")
+        rows.append(((sp, tp), lat / base))
+    print("single-instance TP scaling (vs TP=8):")
+    for tp in (1, 2, 4, 8):
+        lat = m.latency(batch=8, cache_tokens=8 * 32768, sp=1, tp=tp)
+        print(f"  TP{tp}: {lat*1e3:6.2f} ms ({lat/base:.2f}x)")
+    assert rows[-1][1] > 1.5, "SP8TP1 must be clearly worse than SP1TP8"
+    us = (time.perf_counter() - t0) * 1e6
+    return [fmt_row("fig2.sp8tp1_over_sp1tp8", us, f"{rows[-1][1]:.2f}"),
+            fmt_row("fig2.tp1_over_tp8", us,
+                    f"{m.latency(8, 8*32768, 1, 1)/base:.2f}")]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

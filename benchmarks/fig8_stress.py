@@ -1,0 +1,55 @@
+"""Fig. 8: stress tests — max sustainable load per policy per trace.
+
+A policy's max sustainable rate is the largest swept arrival rate whose P99
+TTFT stays under 25x the light-load P99 (the paper normalises to 25x
+light-load latency).  The headline claim: Tetris raises max capacity by
+20-45% over the best baseline.
+"""
+
+import time
+
+import numpy as np
+
+from common import (TTFT_SLO_SCALE, fmt_row, light_load_ttft,
+                    max_sustainable_rate, run_policy)
+
+POLICIES = ["tetris", "single_chunk", "loongserve", "loongserve_disagg",
+            "fixed_sp_8", "fixed_sp_16"]
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    traces = ["short"] if quick else ["short", "medium", "long"]
+    rate_grid = {
+        "short": np.arange(1.0, 10.01, 0.5),
+        "medium": np.arange(0.5, 6.01, 0.5),
+        "long": np.arange(0.25, 4.01, 0.25),
+    }
+    dur = 90 if quick else 150
+    out_rows = []
+    for trace in traces:
+        slo = TTFT_SLO_SCALE * light_load_ttft("tetris", trace)
+        caps = {}
+        for pol in POLICIES:
+            caps[pol] = max_sustainable_rate(pol, trace, slo,
+                                             rate_grid[trace], duration=dur)
+        # single_chunk is OUR ablation (Fig. 13), not a Fig. 8 baseline
+        best_baseline = max(v for k, v in caps.items()
+                            if k not in ("tetris", "single_chunk"))
+        gain = caps["tetris"] / best_baseline if best_baseline else float("nan")
+        print(f"[{trace}] SLO={slo:.2f}s  " +
+              "  ".join(f"{p}={caps[p]:.2f}" for p in POLICIES) +
+              f"  -> tetris/bestbase = {gain:.2f}x")
+        out_rows.append((trace, caps, gain))
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for trace, caps, gain in out_rows:
+        rows.append(fmt_row(f"fig8.{trace}.tetris_capacity_gain",
+                            us / len(out_rows), f"{gain:.2f}"))
+        rows.append(fmt_row(f"fig8.{trace}.tetris_max_rate",
+                            us / len(out_rows), f"{caps['tetris']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,46 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-(arch x
+shape x mesh) table consumed by EXPERIMENTS.md §Roofline."""
+
+import glob
+import json
+import os
+import time
+
+from common import fmt_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    recs = [r for r in load_records() if r.get("status") == "ok"
+            and not r.get("variant")]
+    if not recs:
+        print("no dry-run results found — run repro.launch.dryrun first")
+        return [fmt_row("roofline.records", 0, "0")]
+    print(f"{'arch':22s} {'shape':11s} {'mesh':10s} "
+          f"{'compute':>9s} {'mem(hlo)':>9s} {'mem(adj)':>9s} "
+          f"{'coll':>9s}  bott        useful")
+    n_ok = 0
+    for r in recs:
+        rf = r["roofline"]
+        print(f"{r['arch']:22s} {r['shape']:11s} {r['mesh']:10s} "
+              f"{rf['compute_s']*1e3:8.1f}ms {rf['memory_s']*1e3:8.1f}ms "
+              f"{rf['memory_adj_s']*1e3:8.1f}ms "
+              f"{rf['collective_s']*1e3:8.1f}ms  {rf['bottleneck']:10s} "
+              f"{rf['useful_ratio']:.2f}")
+        n_ok += 1
+    us = (time.perf_counter() - t0) * 1e6
+    return [fmt_row("roofline.records_ok", us, str(n_ok))]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows after each benchmark's own human-readable output.
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "table1_prefill_scaling",
+    "fig2_decode_tp",
+    "fig8_stress",
+    "fig9_ttft_distribution",
+    "fig10_throughput",
+    "fig11_improvement_rate",
+    "fig13_chunking_ablation",
+    "fig14_transfer_overhead",
+    "table2_scheduler_overhead",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+    rows, failures = [], []
+    for name in mods:
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            mod = __import__(name)
+            rows += mod.run(quick=args.quick)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print("\n===== CSV =====")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

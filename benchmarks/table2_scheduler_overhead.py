@@ -1,0 +1,53 @@
+"""Table 2: CDSP scheduler wall-time vs max SP size.
+
+The paper's C++ scheduler reports 22-31us avg / <=87us max up to SP=128.
+Ours is pure Python; we report avg/max over 1000 random invocations per
+pool size and assert it remains real-time (well under one decode step).
+"""
+
+import time
+
+import numpy as np
+
+from common import MODEL, fmt_row
+from repro.core.chunk_planner import CDSPScheduler
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    rows = []
+    n_iter = 200 if quick else 1000
+    print("max-SP  avg(us)  max(us)")
+    for max_sp in (8, 16, 32, 64, 128):
+        cands = [s for s in (1, 2, 4, 8, 16, 32, 64, 128) if s <= max_sp]
+        sched = CDSPScheduler(
+            MODEL if max_sp <= 16 else _extended_model(max_sp),
+            sp_candidates=cands, node_size=8, improvement_rate=0.3)
+        rng = np.random.default_rng(0)
+        pools = [{i: float(rng.uniform(0, 3)) for i in range(max_sp)}
+                 for _ in range(n_iter)]
+        lens = rng.integers(8192, 262144, n_iter)
+        times = []
+        for pool, L in zip(pools, lens):
+            t1 = time.perf_counter()
+            sched.schedule(int(L), pool)
+            times.append(time.perf_counter() - t1)
+        avg, mx = np.mean(times) * 1e6, np.max(times) * 1e6
+        print(f"{max_sp:6d}  {avg:7.1f}  {mx:7.1f}")
+        rows.append(fmt_row(f"table2.sched_avg_us.sp{max_sp}", avg,
+                            f"max={mx:.0f}us"))
+        assert avg < 100_000, "scheduler must stay real-time"
+    _ = (time.perf_counter() - t0)
+    return rows
+
+
+def _extended_model(max_sp: int):
+    from repro.core.latency_model import analytic_model
+    return analytic_model(8.0e9, 32, 4096,
+                          sp_sizes=tuple(s for s in
+                                         (1, 2, 4, 8, 16, 32, 64, 128)
+                                         if s <= max_sp))
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,63 @@
+"""CDSP plan explorer: visualise how Algorithm 1 tetris-fits a request into
+a fragmented prefill pool, across load states and improvement rates.
+
+    PYTHONPATH=src python examples/cdsp_plan_explorer.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.chunk_planner import CDSPScheduler
+from repro.core.latency_model import table1_model
+
+
+def show(alloc, pool, n=16, width=64, t_max=None):
+    """ASCII gantt: rows = instances, time -> right."""
+    t_max = t_max or max(alloc.ttft, max(pool.values()) + 1e-9) * 1.05
+    scale = width / t_max
+    for i in range(n):
+        row = [" "] * width
+        q = int(pool[i] * scale)
+        for j in range(min(q, width)):
+            row[j] = "."                     # existing queue
+        for ci, c in enumerate(alloc.chunks):
+            if i in c.instances:
+                a, b = int(c.t_start * scale), int(c.t_end * scale)
+                for j in range(a, min(b, width)):
+                    row[j] = str(ci)
+        print(f"  p{i:02d} |{''.join(row)}|")
+    print(f"       0{'-' * (width - 10)}{t_max:5.2f}s")
+
+
+def main() -> None:
+    model = table1_model()
+    sched = CDSPScheduler(model, sp_candidates=[1, 2, 4, 8, 16],
+                          node_size=8, min_chunk_tokens=1024)
+    rng = np.random.default_rng(3)
+
+    scenarios = {
+        "idle pool, 128k request": ({i: 0.0 for i in range(16)}, 131072),
+        "half busy (16k req draining), 128k request":
+            ({i: (0.33 if i < 8 else 0.0) for i in range(16)}, 131072),
+        "staircase fragmentation, 64k request":
+            ({i: 0.15 * (i // 4) for i in range(16)}, 65536),
+        "random fragments, 96k request":
+            ({i: float(rng.uniform(0, 0.8)) for i in range(16)}, 98304),
+    }
+    for title, (pool, L) in scenarios.items():
+        print(f"\n=== {title} ===")
+        for rate in (0.05, 0.5):
+            alloc = sched.schedule(L, dict(pool), improvement_rate=rate)
+            plan = " + ".join(f"{c.length//1024}k@SP{c.sp}"
+                              for c in alloc.chunks)
+            print(f" improvement_rate={rate}: TTFT={alloc.ttft:.3f}s  {plan}")
+        alloc = sched.schedule(L, dict(pool), improvement_rate=0.05)
+        show(alloc, pool)
+
+
+if __name__ == "__main__":
+    main()

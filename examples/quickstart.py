@@ -1,0 +1,57 @@
+"""Quickstart: train a reduced model for a few steps, then serve a prompt
+through CDSP chunked prefill + decode.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core.cdsp import chunked_prefill, history_to_decode_caches
+from repro.models.params import count_params, init_params
+from repro.models.sharding import CPU_CTX
+from repro.models.transformer import forward
+from repro.training.data import make_pipeline
+from repro.training.optimizer import AdamW
+from repro.training.train_loop import Trainer
+
+
+def main() -> None:
+    cfg = get_config("llama3-8b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} ({count_params(params)/1e6:.1f}M params)")
+
+    # --- 1. train a little ---------------------------------------------
+    data = make_pipeline(cfg, seq_len=64, batch_size=8)
+    tr = Trainer(cfg, params, opt=AdamW(lr=1e-3, warmup_steps=20))
+    for rec in tr.fit(data, steps=30, log_every=10):
+        print(f"  step {rec['step']:3d} loss {rec['loss']:.3f}")
+    params = tr.params
+
+    # --- 2. CDSP chunked prefill + decode -------------------------------
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0,
+                                cfg.vocab_size)
+    pos = jnp.arange(48, dtype=jnp.int32)[None]
+    logits, hist = chunked_prefill(params, cfg, CPU_CTX, prompt, pos,
+                                   chunk_lens=[16, 32])
+    caches, _ = history_to_decode_caches(cfg, hist, max_seq=96)
+    clen = jnp.array([48], jnp.int32)
+    toks = [int(jnp.argmax(logits[0, 0, :cfg.vocab_size]))]
+    tok = jnp.array([[toks[-1]]], jnp.int32)
+    for _ in range(8):
+        logits, _, caches = forward(params, cfg, CPU_CTX, tok, clen[:, None],
+                                    "decode", caches=caches, cache_len=clen)
+        toks.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+        tok = jnp.array([[toks[-1]]], jnp.int32)
+        clen = clen + 1
+    print(f"generated (CDSP 2-chunk prefill -> decode): {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Architecture registry + input specs for every (arch x input-shape) pair.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given shape — weak-type-correct, shardable, no device
+allocation — used by the dry-run and by the launcher.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES = {
+    "yi-9b": "yi_9b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3-8b": "llama3_8b",
+    "llama3-70b": "llama3_70b",
+}
+
+ASSIGNED = list(_MODULES)[:10]          # the 10 pool architectures
+PAPER_MODELS = ["llama3-8b", "llama3-70b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in _MODULES}
+
+
+# ------------------------------------------------------------- cache shapes
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype: str = "bfloat16") -> dict:
+    """ShapeDtypeStruct tree mirroring the transformer cache structure."""
+    dt = jnp.dtype(dtype)
+    kvh, dh, nb = cfg.n_kv_heads, cfg.head_dim_, cfg.n_blocks
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = {}
+        if spec.mixer == "attn":
+            c["self"] = {
+                "k": jax.ShapeDtypeStruct((nb, batch, max_seq, kvh, dh), dt),
+                "v": jax.ShapeDtypeStruct((nb, batch, max_seq, kvh, dh), dt)}
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            ch = d_in + 2 * s.ngroups * s.d_state
+            c["self"] = {
+                "conv": jax.ShapeDtypeStruct((nb, batch, s.d_conv - 1, ch), dt),
+                "ssm": jax.ShapeDtypeStruct(
+                    (nb, batch, H, s.head_dim, s.d_state), jnp.float32)}
+        if spec.cross_attn:
+            c["cross"] = {
+                "k": jax.ShapeDtypeStruct(
+                    (nb, batch, cfg.cross_kv_len, kvh, dh), dt),
+                "v": jax.ShapeDtypeStruct(
+                    (nb, batch, cfg.cross_kv_len, kvh, dh), dt)}
+        out[str(i)] = c
+    return out
+
+
+def _pos_struct(cfg: ModelConfig, batch: int, seq: int):
+    shape = (3, batch, seq) if cfg.rope_type == "mrope" else (batch, seq)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype: str = "bfloat16") -> dict:
+    """Inputs for the step function of the given shape kind."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        d: dict = {}
+        if cfg.encoder_decoder:
+            # stubbed audio frontend: precomputed frame embeddings; decoder
+            # token stream at S//4 (DESIGN.md §Whisper shape conventions)
+            s_dec = max(S // 4, 64)
+            d["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(dtype))
+            d["tokens"] = jax.ShapeDtypeStruct((B, s_dec), i32)
+            d["labels"] = jax.ShapeDtypeStruct((B, s_dec), i32)
+            d["positions"] = _pos_struct(cfg, B, s_dec)
+        else:
+            d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            d["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            d["positions"] = _pos_struct(cfg, B, S)
+        return d
+    if shape.kind == "prefill":
+        d = {}
+        if cfg.encoder_decoder:
+            d["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(dtype))
+            d["tokens"] = jax.ShapeDtypeStruct((B, 4), i32)  # decoder prompt
+            d["positions"] = _pos_struct(cfg, B, 4)
+        else:
+            d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            d["positions"] = _pos_struct(cfg, B, S)
+        return d
+    if shape.kind == "decode":
+        d = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "positions": _pos_struct(cfg, B, 1),
+            "cache_len": jax.ShapeDtypeStruct((B,), i32),
+            "caches": cache_specs(cfg, B, S, dtype),
+        }
+        return d
+    raise ValueError(shape.kind)
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k needs a sub-quadratic path; whisper has no 500k decode."""
+    if shape.name == "long_500k":
+        return cfg.has_subquadratic_path
+    return True

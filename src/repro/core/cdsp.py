@@ -1,0 +1,131 @@
+"""Chunkwise Dynamic Sequence Parallelism — prefill execution (Sec. 4.1).
+
+``chunked_prefill`` runs a request's prompt chunk-by-chunk: chunk *i* attends
+to the re-balanced KV cache of chunks < i (cross-chunk causal masking is
+automatic via position arrays) plus its own causal self-attention, and SSD
+state / conv windows are handed across chunks.  Numerically this equals
+monolithic prefill bit-for-bit (tests/test_cdsp.py).
+
+In the distributed engine each chunk runs on a (nested) instance group; the
+history dict handed to the next chunk is simply re-sharded over the larger
+group — that re-shard IS the paper's "cache balancing" step (a DMA reshard
+on TPU), and the layer-wise overlap of Sec. 4.1 corresponds to XLA's
+latency-hiding scheduler overlapping the reshard collective with the FC
+compute of the adjacent layers.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import ExecContext
+from repro.models.transformer import forward
+
+
+def _append_history(cfg: ModelConfig, history: Optional[dict],
+                    new_caches: dict, positions: jax.Array) -> dict:
+    """Fold a chunk's produced caches into the running history."""
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        key = str(i)
+        nc = new_caches[key].get("self")
+        prev = None if history is None else history.get(key, {}).get("self")
+        if spec.mixer == "attn":
+            nb, B_, L = nc["k"].shape[:3]
+            # pos carries a leading n_blocks axis so the whole history tree
+            # is scannable (lax.scan xs slice per block)
+            pos_b = jnp.broadcast_to(pos2d[None], (nb, B_, L))
+            if prev is None:
+                ent = {"k": nc["k"], "v": nc["v"], "pos": pos_b}
+            else:
+                ent = {"k": jnp.concatenate([prev["k"], nc["k"]], axis=2),
+                       "v": jnp.concatenate([prev["v"], nc["v"]], axis=2),
+                       "pos": jnp.concatenate([prev["pos"], pos_b], axis=2)}
+        else:
+            ent = nc                       # SSD state + conv window replace
+        out[key] = {"self": ent}
+        if "cross" in new_caches[key]:
+            out[key]["cross"] = new_caches[key]["cross"]
+    return out
+
+
+def _history_for_layers(history: Optional[dict]) -> Optional[dict]:
+    """Per-layer view: attention history k/v have a leading n_blocks axis
+    (k: (nb, B, C, KVH, D), pos: (B, C)); positions broadcast per block is
+    handled inside the scan (pos has no block axis, so wrap it)."""
+    return history
+
+
+def chunked_prefill(params: dict, cfg: ModelConfig, ctx: ExecContext,
+                    tokens: jax.Array, positions: jax.Array,
+                    chunk_lens: List[int],
+                    encoder_frames: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, dict]:
+    """Run CDSP prefill over ``chunk_lens`` (sum == S).
+
+    Returns (next-token logits (B, 1, V), history) where history holds the
+    full per-layer KV (attention, storage order = chunk concatenation) and
+    final SSD/conv states — ready for hand-off to a decode instance.
+    """
+    B, S = tokens.shape[0], tokens.shape[-1]
+    assert sum(chunk_lens) == S, (chunk_lens, S)
+    if cfg.encoder_decoder:
+        # CDSP chunks the *encoder* sequence for enc-dec models; the decoder
+        # prompt is tiny and prefills in one piece (DESIGN.md).
+        assert len(chunk_lens) == 1, "enc-dec decoder prefill is single-chunk"
+    history: Optional[dict] = None
+    logits = None
+    off = 0
+    for n, L in enumerate(chunk_lens):
+        tok_c = tokens[:, off:off + L]
+        pos_c = (positions[..., off:off + L])
+        hist_in = history
+        # the pos entry needs a per-block broadcast axis matching scan xs
+        logits, _, new_caches = forward(
+            params, cfg, ctx, tok_c, pos_c, "prefill",
+            history=hist_in,
+            encoder_frames=encoder_frames if n == 0 else None)
+        history = _append_history(cfg, history, new_caches, pos_c)
+        off += L
+    return logits, history
+
+
+def history_to_decode_caches(cfg: ModelConfig, history: dict,
+                             max_seq: int) -> Tuple[dict, jax.Array]:
+    """Convert CDSP history into decode caches (natural order, padded to
+    ``max_seq``) — the prefill->decode KV transfer step.
+
+    Attention history may be in zigzag/chunked storage order; decode masking
+    is length-based, so we sort by position per batch row."""
+    caches = {}
+    cache_len = None
+    for i, spec in enumerate(cfg.pattern):
+        ent = history[str(i)]["self"]
+        if spec.mixer == "attn":
+            k, v, pos = ent["k"], ent["v"], ent["pos"][0]  # pos: (B, C)
+            order = jnp.argsort(pos, axis=1)               # (B, C)
+            k = jnp.take_along_axis(
+                k, order[None, :, :, None, None], axis=2)
+            v = jnp.take_along_axis(
+                v, order[None, :, :, None, None], axis=2)
+            C = k.shape[2]
+            pad = max_seq - C
+            if pad > 0:
+                zk = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], k.dtype)
+                k = jnp.concatenate([k, zk], axis=2)
+                v = jnp.concatenate([v, zk], axis=2)
+            caches[str(i)] = {"self": {"k": k, "v": v}}
+            cache_len = jnp.full((k.shape[1],), C, jnp.int32)
+        else:
+            caches[str(i)] = {"self": ent}
+        if "cross" in history[str(i)]:
+            caches[str(i)]["cross"] = history[str(i)]["cross"]
+    if cache_len is None:                                 # pure SSM
+        nb_b = jax.tree.leaves(history)[0].shape[1]
+        cache_len = jnp.zeros((nb_b,), jnp.int32)
+    return caches, cache_len

@@ -1,0 +1,79 @@
+"""Simulator-based improvement-rate profiler (Sec. 5.1, Sec. 6).
+
+The request length distribution of long-context services is stable over
+days/weeks, so the optimal SP-expansion threshold ("improvement rate") per
+arrival rate is profiled OFFLINE: sample requests at each rate, simulate
+prefill with Eq. (1), and pick the rate minimising mean TTFT.  Online, the
+scheduler monitors the arrival rate over a sliding window and looks up the
+nearest profiled rate (paper: refreshed every 30 s; rates span 0.05-0.75).
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.latency_model import PrefillLatencyModel
+from repro.serving.simulator import (ClusterSpec, Simulator, TetrisPolicy,
+                                     summarize)
+from repro.serving.workload import make_trace
+
+DEFAULT_RATES = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.75)
+
+
+def profile_improvement_rates(
+        model: PrefillLatencyModel, spec: ClusterSpec, trace: str,
+        arrival_rates: Sequence[float],
+        improvement_rates: Sequence[float] = DEFAULT_RATES,
+        duration: float = 300.0, seed: int = 0,
+        objective: str = "ttft_mean") -> Dict[float, float]:
+    """For each arrival rate, find the improvement rate minimising TTFT."""
+    table: Dict[float, float] = {}
+    for ar in arrival_rates:
+        reqs_proto = make_trace(trace, ar, duration, seed=seed)
+        best, best_val = improvement_rates[0], float("inf")
+        for ir in improvement_rates:
+            reqs = [type(r)(rid=r.rid, arrival=r.arrival,
+                            prompt_len=r.prompt_len, output_len=r.output_len)
+                    for r in reqs_proto]
+            sim = Simulator(spec, TetrisPolicy(model, spec,
+                                               rate_fn=lambda now: ir))
+            out = sim.run(reqs)
+            val = summarize(out)[objective]
+            if np.isfinite(val) and val < best_val:
+                best, best_val = ir, val
+        table[ar] = best
+    return table
+
+
+@dataclass
+class DynamicRateController:
+    """Online controller: sliding-window arrival-rate estimate -> profiled
+    optimal improvement rate (nearest recorded arrival rate)."""
+    table: Dict[float, float]
+    window: float = 30.0
+    default: float = 0.3
+    _arrivals: List[float] = field(default_factory=list)
+    _keys: Optional[List[float]] = None
+
+    def observe(self, t: float) -> None:
+        self._arrivals.append(t)
+
+    def rate(self, now: float) -> float:
+        if not self.table:
+            return self.default
+        lo = now - self.window
+        while self._arrivals and self._arrivals[0] < lo:
+            self._arrivals.pop(0)
+        if not self._arrivals:
+            return self.default
+        ar = len(self._arrivals) / self.window
+        if self._keys is None:
+            self._keys = sorted(self.table)
+        i = bisect.bisect_left(self._keys, ar)
+        cands = self._keys[max(0, i - 1):i + 1]
+        key = min(cands, key=lambda k: abs(k - ar))
+        return self.table[key]

@@ -1,0 +1,67 @@
+"""Zigzag sequence layout for load-balanced causal ring attention.
+
+For N sequence-parallel shards, the sequence is cut into 2N equal slices
+S_0..S_{2N-1}; shard i holds (S_i, S_{2N-1-i}).  Under a causal mask every
+shard then owns the same amount of attention work (Sec. 2.3 of the paper).
+
+The layout is expressed as a permutation: arrays are stored in "shard order"
+(shard 0's tokens first, ...), and explicit position arrays carry the true
+token positions — the attention kernels mask on positions, so no other code
+needs to know about zigzag.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def zigzag_permutation(seq_len: int, n_shards: int) -> np.ndarray:
+    """perm[j] = original position of the j-th token in shard order."""
+    assert seq_len % (2 * n_shards) == 0, (seq_len, n_shards)
+    slc = seq_len // (2 * n_shards)
+    order = []
+    for i in range(n_shards):
+        order.append(np.arange(i * slc, (i + 1) * slc))
+        j = 2 * n_shards - 1 - i
+        order.append(np.arange(j * slc, (j + 1) * slc))
+    return np.concatenate(order)
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    return inv
+
+
+def zigzag_shard(x: jax.Array, n_shards: int, axis: int = 1) -> jax.Array:
+    """Reorder ``axis`` into zigzag shard order (then shard it contiguously)."""
+    perm = zigzag_permutation(x.shape[axis], n_shards)
+    return jnp.take(x, jnp.asarray(perm), axis=axis)
+
+
+def zigzag_unshard(x: jax.Array, n_shards: int, axis: int = 1) -> jax.Array:
+    perm = inverse_permutation(zigzag_permutation(x.shape[axis], n_shards))
+    return jnp.take(x, jnp.asarray(perm), axis=axis)
+
+
+def zigzag_positions(seq_len: int, n_shards: int, offset: int = 0) -> jax.Array:
+    """Global positions, in shard order (shape (seq_len,))."""
+    return jnp.asarray(zigzag_permutation(seq_len, n_shards) + offset,
+                       dtype=jnp.int32)
+
+
+def striped_permutation(seq_len: int, n_shards: int) -> np.ndarray:
+    """Striped Attention layout: round-robin token stripes (for comparison)."""
+    assert seq_len % n_shards == 0
+    return np.arange(seq_len).reshape(-1, n_shards).T.reshape(-1)
+
+
+def workload_imbalance(perm: np.ndarray, n_shards: int) -> float:
+    """max/mean causal-mask work across shards (1.0 = perfectly balanced)."""
+    S = perm.size
+    per_shard = perm.reshape(n_shards, S // n_shards)
+    # work of shard i = sum over its query positions p of (p + 1)
+    work = (per_shard.astype(np.int64) + 1).sum(axis=1)
+    return float(work.max() / work.mean())

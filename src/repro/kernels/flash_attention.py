@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention with position-array masking.
+
+Target: TPU MXU — (bq, bk) = (128, 128) tiles, head_dim 128, fp32
+accumulation in VMEM scratch.  The kv-block axis is the innermost
+(sequential) grid dimension; running (max, sum, acc) statistics live in VMEM
+scratch across kv steps, the classic flash schedule.
+
+Masking is driven by explicit q/kv position arrays (see kernels/ref.py), so
+the same kernel serves plain causal prefill, CDSP chunked prefill against
+historical KV, zigzag ring-attention shards and sliding windows.  Blocks
+whose mask is entirely zero are skipped via predication (``pl.when``) — with
+the zigzag layout this recovers the ~2x causal-skip saving.
+
+Validated on CPU with interpret=True against kernels/ref.py (tests/).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref,
+                  o_ref, lse_ref, acc_scr, m_scr, l_scr,
+                  *, scale: float, nk: int, causal: bool,
+                  window: Optional[int]):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q_pos = q_pos_ref[0, :]                                   # (bq,)
+    kv_pos = kv_pos_ref[0, :]                                 # (bk,)
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=jnp.bool_)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+        lse = jnp.where(l > 0.0, m_scr[...] + jnp.log(safe_l), NEG_INF)
+        lse_ref[0, 0, :] = lse.astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softmax_scale", "block_q",
+                     "block_k", "interpret", "with_lse"))
+def flash_attention(
+    q: jax.Array,                      # (B, Sq, H, D)
+    k: jax.Array,                      # (B, Sk, KVH, D)
+    v: jax.Array,
+    q_pos: jax.Array,                  # (B, Sq) int32
+    kv_pos: jax.Array,                 # (B, Sk) int32
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    with_lse: bool = False,
+) -> jax.Array | Tuple[jax.Array, jax.Array]:
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    group = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (B, Sk))
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(_flash_kernel, scale=scale, nk=nk,
+                               causal=causal, window=window)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)
+    if with_lse:
+        return out, lse
+    return out

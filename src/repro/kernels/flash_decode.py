@@ -1,0 +1,137 @@
+"""Pallas TPU flash-decoding: single-token attention over a long KV cache.
+
+Decode attention is HBM-bandwidth bound (the whole KV cache is streamed once
+per token), so the kernel's job is a clean sequential pipeline over KV blocks
+with fp32 running statistics in VMEM — the Tetris/FlashDecoding pattern.
+Grid is (batch, kv_blocks) with kv innermost; all heads of one sequence are
+processed together ((H, D) easily fits VMEM).
+
+Out-of-range cache slots are masked with per-sequence ``lengths``; a sliding
+window (Mixtral / the beyond-paper long-context variant) masks slots older
+than ``length - window``.  Blocks fully outside the valid range are skipped
+via predication, which matters for continuous batching where sequence lengths
+in a decode batch differ wildly.
+
+Validated against kernels/ref.decode_attention_ref in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                   acc_scr, m_scr, l_scr,
+                   *, scale: float, nk: int, bk: int, group: int,
+                   window: Optional[int], kv_offset: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    length = len_ref[0]
+    kv_pos = kv_offset + ik * bk + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bk), 1)[0]                                # (bk,)
+    valid = kv_pos < length
+    if window is not None:
+        valid &= kv_pos >= (length - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale                 # (H, D)
+        k = k_ref[0].astype(jnp.float32)                         # (bk, KVH, D)
+        v = v_ref[0].astype(jnp.float32)
+        KVH = k.shape[1]
+        H, D = q.shape
+        qg = q.reshape(KVH, group, D)
+        # batched over kv heads: (KVH, group, bk)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 0, 2), (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_prev = m_scr[...]                                      # (H,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1).reshape(H))
+        p = jnp.exp(s - m_new.reshape(KVH, group)[:, :, None])
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                          # (H,)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1).reshape(H)
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)                  # (KVH, group, D)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, D)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = jnp.where(l > 0.0, m_scr[...] + jnp.log(safe_l), NEG_INF
+                               ).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softmax_scale", "block_k", "interpret",
+                     "with_lse", "kv_offset"))
+def flash_decode(
+    q: jax.Array,                      # (B, H, D)
+    k_cache: jax.Array,                # (B, S, KVH, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,                # (B,) int32
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+    with_lse: bool = False,
+    kv_offset: int = 0,
+) -> jax.Array | Tuple[jax.Array, jax.Array]:
+    B, H, D = q.shape
+    _, S, KVH, _ = k_cache.shape
+    group = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+
+    kernel = functools.partial(_decode_kernel, scale=scale, nk=nk, bk=bk,
+                               group=group, window=window, kv_offset=kv_offset)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ik: (b,)),
+            pl.BlockSpec((1, H, D), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, bk, KVH, D), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, bk, KVH, D), lambda b, ik: (b, ik, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, ik: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+    if with_lse:
+        return out, lse
+    return out

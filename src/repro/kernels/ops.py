@@ -1,0 +1,91 @@
+"""Backend-dispatching wrappers around the Pallas kernels.
+
+On TPU the Pallas kernels run natively; on CPU (this container, and the unit
+tests) the pure-jnp oracles in ref.py are the execution path — identical
+math, identical shapes, so sharding/collective structure of the surrounding
+program is unchanged.  ``impl="interpret"`` forces the Pallas kernel bodies
+through the interpreter for kernel validation.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+_FORCED = os.environ.get("REPRO_KERNEL_IMPL")  # ref | pallas | interpret
+
+
+def default_impl() -> str:
+    if _FORCED:
+        return _FORCED
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+              window: Optional[int] = None, softmax_scale=None,
+              with_lse: bool = False, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "ref_blocked":
+        return _ref.attention_ref_blocked(
+            q, k, v, q_pos, kv_pos, causal=causal, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse)
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, q_pos, kv_pos, causal=causal,
+                                  window=window, softmax_scale=softmax_scale,
+                                  with_lse=with_lse)
+    return _flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                            window=window, softmax_scale=softmax_scale,
+                            with_lse=with_lse,
+                            interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     window: Optional[int] = None, softmax_scale=None,
+                     with_lse: bool = False, kv_offset: int = 0,
+                     impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl in ("ref", "ref_blocked"):
+        return _ref.decode_attention_ref(
+            q, k_cache, v_cache, lengths, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse,
+            kv_offset=kv_offset)
+    return _flash_decode(q, k_cache, v_cache, lengths, window=window,
+                         softmax_scale=softmax_scale, with_lse=with_lse,
+                         kv_offset=kv_offset, interpret=(impl == "interpret"))
+
+
+def ssd(x, dt, A, Bm, Cm, *, h0=None, chunk: int = 128,
+        impl: Optional[str] = None):
+    import jax.numpy as jnp
+    impl = impl or default_impl()
+    S = x.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is the identity element of the SSD recurrence
+        # (decay exp(0)=1, zero input contribution), so pad freely.
+        zpad = lambda a: jnp.concatenate(
+            [a, jnp.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)], axis=1)
+        x, dt, Bm, Cm = zpad(x), zpad(dt), zpad(Bm), zpad(Cm)
+    if impl in ("ref", "ref_blocked"):
+        y, h = _ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+                                    return_state=True)
+    else:
+        y, h = _ssd_scan(x, dt, A, Bm, Cm, h0=h0, chunk=chunk,
+                         interpret=(impl == "interpret"))
+    return (y[:, :S], h) if pad else (y, h)
+
+
+def ssd_decode(x, dt, A, Bm, Cm, h):
+    # O(1) state update; no kernel needed (bandwidth trivial per token).
+    return _ref.ssd_decode_ref(x, dt, A, Bm, Cm, h)
+
+
+merge_partials = _ref.merge_partials

@@ -1,0 +1,39 @@
+"""Production mesh construction + mode-specific ExecContexts.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips, DCN across pods.
+
+Defined as functions so importing this module never touches jax device
+state (required by the dry-run bootstrap ordering).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.sharding import ExecContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_context(mesh, mode: str, *, impl: Optional[str] = None,
+                 window: Optional[int] = None) -> ExecContext:
+    """Mesh-axis roles per execution mode (DESIGN.md §4)."""
+    pod = "pod" if "pod" in mesh.axis_names else None
+    common = dict(mesh=mesh, tp_axis="model", pod_axis=pod, impl=impl,
+                  window=window)
+    if mode == "train":
+        return ExecContext(dp_axis="data", remat=True, **common)
+    if mode == "prefill":
+        return ExecContext(sp_axis="data", **common)
+    if mode == "decode":
+        return ExecContext(dp_axis="data", kv_split_axis="model", **common)
+    raise ValueError(mode)

@@ -1,0 +1,198 @@
+"""Step-function builders + sharding trees for jit lowering.
+
+One builder per input-shape kind: train_step (fwd+bwd+AdamW), prefill_step
+(ring-attention SP prefill -> logits + KV), decode_step (one token against a
+sharded KV cache).  Each returns (fn, in_shardings, args) ready for
+``jax.jit(fn, in_shardings=...).lower(*args)`` — args are ShapeDtypeStructs
+from configs/registry.input_specs, so nothing is allocated.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import cache_specs, input_specs
+from repro.models.config import InputShape, ModelConfig
+from repro.models.params import abstract_params, param_specs
+from repro.models.sharding import ExecContext
+from repro.models.transformer import forward
+from repro.launch.mesh import make_context
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def scanned_param_bytes_per_dev(cfg: ModelConfig, mesh,
+                                dtype_bytes: int = 2) -> int:
+    """Per-device bytes of the layer-stack (scan xs) parameters.
+
+    Used to adjust CPU-XLA memory analysis: the CPU backend double-buffers
+    the while-loop carry (the whole scanned parameter stack), which TPU XLA
+    aliases — see EXPERIMENTS.md §Dry-run notes."""
+    from repro.models.params import param_shapes, param_specs
+    ctx = make_context(mesh, "prefill")
+    shapes = param_shapes(cfg)
+    specs = param_specs(cfg, ctx)
+    total = 0
+    for key in ("blocks", "encoder"):
+        if key not in shapes:
+            continue
+        flat_sh = jax.tree_util.tree_flatten_with_path(
+            shapes[key], is_leaf=lambda x: isinstance(x, tuple))[0]
+        flat_sp = jax.tree_util.tree_flatten_with_path(
+            specs[key], is_leaf=lambda x: isinstance(x, P))[0]
+        sp_map = {tuple(str(k) for k in path): sp for path, sp in flat_sp}
+        for path, sh in flat_sh:
+            sp = sp_map[tuple(str(k) for k in path)]
+            n = 1
+            for d in sh:
+                n *= d
+            shard = 1
+            for axes in sp:
+                if axes is None:
+                    continue
+                for a in (axes if isinstance(axes, tuple) else (axes,)):
+                    shard *= mesh.shape[a]
+            total += n * dtype_bytes // shard
+    return total
+
+
+def _tree_ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _pos_spec(cfg: ModelConfig, batch_axes, seq_axis) -> P:
+    if cfg.rope_type == "mrope":
+        return P(None, batch_axes, seq_axis)
+    return P(batch_axes, seq_axis)
+
+
+def _cache_spec_tree(cfg: ModelConfig, ctx: ExecContext) -> dict:
+    """PartitionSpecs matching configs.registry.cache_specs structure."""
+    n_model = ctx.axis_size(ctx.tp_axis)
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = {}
+        if spec.mixer == "attn":
+            kv = P(None, ctx.batch_axes, ctx.kv_split_axis, None, None)
+            c["self"] = {"k": kv, "v": kv}
+        else:
+            s = cfg.ssm
+            H = s.expand * cfg.d_model // s.head_dim
+            h_ax = ctx.tp_axis if H % n_model == 0 else None
+            c["self"] = {"conv": P(None, ctx.batch_axes, None, None),
+                         "ssm": P(None, ctx.batch_axes, h_ax, None, None)}
+        if spec.cross_attn:
+            c["cross"] = {"k": P(None, ctx.batch_axes, None, None, None),
+                          "v": P(None, ctx.batch_axes, None, None, None)}
+        out[str(i)] = c
+    return out
+
+
+def decode_context(mesh, shape: InputShape, cfg: ModelConfig,
+                   impl: Optional[str] = None) -> ExecContext:
+    """long_500k (batch 1) cannot shard batch: split KV over BOTH axes."""
+    pod = "pod" if "pod" in mesh.axis_names else None
+    window = cfg.long_context_window if shape.name == "long_500k" else None
+    if shape.global_batch >= mesh.shape["data"]:
+        return ExecContext(mesh=mesh, dp_axis="data", tp_axis="model",
+                           kv_split_axis="model", pod_axis=pod, impl=impl,
+                           window=window)
+    return ExecContext(mesh=mesh, dp_axis=None, tp_axis="model",
+                       kv_split_axis=("data", "model"),
+                       pod_axis=pod if shape.global_batch >= 2 else None,
+                       impl=impl, window=window)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh,
+               impl: Optional[str] = None, dtype: str = "bfloat16",
+               unroll_scan: bool = False,
+               ctx_overrides: Optional[dict] = None):
+    """Returns (fn, in_shardings, abstract_args)."""
+    specs = input_specs(cfg, shape, dtype=dtype)
+    pod = "pod" if "pod" in mesh.axis_names else None
+    ov = dict(ctx_overrides or {}, unroll_scan=unroll_scan)
+
+    if shape.kind == "train":
+        ctx = make_context(mesh, "train", impl=impl).with_(**ov)
+        ba = ctx.batch_axes
+        params = abstract_params(cfg, dtype="float32")
+        p_specs = param_specs(cfg, ctx)
+        opt = AdamW()
+        opt_state = jax.eval_shape(opt.init, params)
+        o_specs = AdamWState(step=P(), mu=p_specs, nu=p_specs)
+
+        def train_step(params, opt_state, batch):
+            from repro.training.train_loop import make_train_step
+            return make_train_step(cfg, ctx, opt)(params, opt_state, batch)
+
+        batch_specs = {"tokens": P(ba, None), "labels": P(ba, None),
+                       "positions": _pos_spec(cfg, ba, None)}
+        batch_abs = {k: specs[k] for k in ("tokens", "labels", "positions")}
+        if cfg.encoder_decoder:
+            batch_specs["encoder_frames"] = P(ba, ctx.tp_axis, None)
+            batch_abs["encoder_frames"] = specs["encoder_frames"]
+        in_sh = (_tree_ns(mesh, p_specs), _tree_ns(mesh, o_specs),
+                 _tree_ns(mesh, batch_specs))
+        return train_step, in_sh, (params, opt_state, batch_abs)
+
+    if shape.kind == "prefill":
+        ctx = make_context(mesh, "prefill", impl=impl).with_(**ov)
+        params = abstract_params(cfg, dtype=dtype)
+        p_specs = param_specs(cfg, ctx)
+
+        def prefill_step(params, batch):
+            logits, _, caches = forward(
+                params, cfg, ctx, batch["tokens"], batch["positions"],
+                "prefill", encoder_frames=batch.get("encoder_frames"))
+            return logits, caches
+
+        if cfg.encoder_decoder:
+            batch_specs = {"tokens": P(pod, None),
+                           "positions": _pos_spec(cfg, pod, None),
+                           "encoder_frames": P(pod, "data", None)}
+        else:
+            batch_specs = {"tokens": P(pod, "data"),
+                           "positions": _pos_spec(cfg, pod, "data")}
+        batch_abs = {k: specs[k] for k in batch_specs}
+        in_sh = (_tree_ns(mesh, p_specs), _tree_ns(mesh, batch_specs))
+        return prefill_step, in_sh, (params, batch_abs)
+
+    # ----------------------------------------------------------- decode
+    ctx = decode_context(mesh, shape, cfg, impl=impl).with_(**ov)
+    ba = ctx.batch_axes
+    params = abstract_params(cfg, dtype=dtype)
+    p_specs = param_specs(cfg, ctx)
+
+    def decode_step(params, batch):
+        logits, _, caches = forward(
+            params, cfg, ctx, batch["tokens"], batch["positions"], "decode",
+            caches=batch["caches"], cache_len=batch["cache_len"])
+        return logits, caches
+
+    cache_tree = _cache_spec_tree(cfg, ctx)
+    cache_abs = specs["caches"]
+    window = ctx.window or cfg.sliding_window
+    if ctx.ring_cache and window is not None and window < shape.seq_len:
+        # ring-buffer SWA cache: attention caches shrink to window size and
+        # lose the seq split (tiny, batch-sharded/replicated)
+        from repro.configs.registry import cache_specs
+        cache_abs = cache_specs(cfg, shape.global_batch, window, dtype)
+        ring_ctx = ctx.with_(kv_split_axis=None)
+        cache_tree = _cache_spec_tree(cfg, ring_ctx)
+        # cross caches / ssm caches are unaffected structurally
+    batch_specs = {"tokens": P(ba, None),
+                   "positions": _pos_spec(cfg, ba, None),
+                   "cache_len": P(ba),
+                   "caches": cache_tree}
+    batch_abs = {k: specs[k] for k in ("tokens", "positions", "cache_len")}
+    batch_abs["caches"] = cache_abs
+    in_sh = (_tree_ns(mesh, p_specs), _tree_ns(mesh, batch_specs))
+    return decode_step, in_sh, (params, batch_abs)

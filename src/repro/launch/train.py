@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch yi-9b ...``.
+
+On CPU this trains the reduced variant of the chosen architecture end-to-end
+(the quickstart path); on a real TPU slice the same script runs the full
+config on the production mesh (--full --mesh pod16x16).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config on the production mesh (TPU)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.params import count_params, init_params
+    from repro.models.sharding import CPU_CTX
+    from repro.training.data import make_pipeline
+    from repro.training.optimizer import AdamW
+    from repro.training.train_loop import Trainer
+
+    cfg = get_config(args.arch)
+    ctx = CPU_CTX
+    if args.full:
+        from repro.launch.mesh import make_context, make_production_mesh
+        mesh = make_production_mesh()
+        ctx = make_context(mesh, "train")
+    else:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {count_params(params)/1e6:.1f}M params")
+    data = make_pipeline(cfg, args.seq_len, args.batch)
+    tr = Trainer(cfg, params, ctx=ctx, opt=AdamW(lr=args.lr),
+                 ckpt_path=args.ckpt, ckpt_every=50 if args.ckpt else 0)
+    for rec in tr.fit(data, args.steps, log_every=10):
+        print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+              f"gnorm {rec['gnorm']:.3f} wall {rec['wall']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Attention block: projections + RoPE + mode-dispatched attention core.
+
+Modes:
+  train   — full causal attention, batch-parallel (per-device local compute)
+  prefill — ring attention over ctx.sp_axis when set (sequence sharded,
+            zigzag or contiguous order carried by position arrays); KV cache
+            returned in shard order
+  decode  — one token per sequence against a KV cache; split-KV flash decode
+            over ctx.kv_split_axis when set
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ring_attention import (ring_attention, sharded_cache_update,
+                                       split_kv_decode)
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.sharding import ExecContext
+
+
+def qkv_proj(x: jax.Array, p: dict, cfg: ModelConfig, prefix: str = ""
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    dh = cfg.head_dim_
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wq"].astype(dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wk"].astype(dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p[prefix + "bq"].astype(dtype)
+        k = k + p[prefix + "bk"].astype(dtype)
+        v = v + p[prefix + "bv"].astype(dtype)
+    q = q.reshape(B, S, cfg.padded_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def out_proj(o: jax.Array, p: dict, prefix: str = "") -> jax.Array:
+    B, S = o.shape[:2]
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1),
+                      p[prefix + "wo"].astype(o.dtype))
+
+
+def _qkv_specs(cfg: ModelConfig, ctx: ExecContext, seq_axis):
+    h_ax = ctx.shardable(cfg.padded_heads, ctx.tp_axis)
+    kv_ax = ctx.shardable(cfg.n_kv_heads, ctx.tp_axis)
+    return h_ax, kv_ax, seq_axis
+
+
+def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                    ctx: ExecContext, positions: jax.Array, mode: str,
+                    cache: Optional[dict] = None,
+                    cache_len: Optional[jax.Array] = None,
+                    window: Optional[int] = None,
+                    causal: bool = True, prefix: str = "",
+                    history: Optional[dict] = None):
+    """Returns (out, new_cache_or_None).
+
+    positions: (B, S) int32 (or (3, B, S) for M-RoPE) in storage order.
+    decode: x is (B, 1, d); cache {"k","v"}: (B, S_max, KVH, D); cache_len (B,).
+    history (CDSP chunked prefill): {"k","v","pos"} — previous chunks' KV,
+    already re-balanced (evenly re-sharded) over the current chunk's group;
+    position-array masking makes the cross-chunk causal mask automatic.
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(x, p, cfg, prefix)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+
+    h_ax, kv_ax, _ = _qkv_specs(cfg, ctx, None)
+    pos2d = positions[0] if positions.ndim == 3 else positions
+
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        qd = q[:, 0]                                         # (B, H, D)
+        S_max = cache["k"].shape[1]
+        if (ctx.ring_cache and window is not None and S_max <= window):
+            # ring-buffer SWA cache: the buffer holds exactly the last
+            # S_max(=window) tokens; attention is permutation-invariant so
+            # slot order is irrelevant once the buffer wraps.
+            bidx = jnp.arange(B)
+            slot = cache_len % S_max
+            k_cache = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+            o = ops.decode_attention(qd, k_cache, v_cache,
+                                     jnp.minimum(cache_len + 1, S_max),
+                                     impl=ctx.impl)
+            out = out_proj(o[:, None], p, prefix)
+            return out, {"k": k_cache, "v": v_cache}
+        if (ctx.window_slice and window is not None
+                and S_max >= 4 * window):
+            # windowed decode: persist the new KV into the (sharded) full
+            # buffer, but ATTEND only over the last `window` tokens — turns
+            # an O(S_max) cache stream into O(window) per step.
+            if ctx.kv_split_axis is not None and ctx.mesh is not None:
+                k_cache, v_cache = sharded_cache_update(
+                    cache["k"], cache["v"], k[:, 0], v[:, 0], cache_len,
+                    mesh=ctx.mesh, split_axis=ctx.kv_split_axis,
+                    batch_axis=ctx.batch_axes)
+            else:
+                bidx = jnp.arange(B)
+                k_cache = cache["k"].at[bidx, cache_len].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[bidx, cache_len].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            wbuf = window + 8
+            start = jnp.clip(cache_len - (wbuf - 1), 0, S_max - wbuf)
+            k_win = jax.vmap(
+                lambda c, s: jax.lax.dynamic_slice_in_dim(c, s, wbuf, 0)
+            )(k_cache, start)
+            v_win = jax.vmap(
+                lambda c, s: jax.lax.dynamic_slice_in_dim(c, s, wbuf, 0)
+            )(v_cache, start)
+            o = ops.decode_attention(qd, k_win, v_win,
+                                     cache_len + 1 - start,
+                                     window=window, impl=ctx.impl)
+            out = out_proj(o[:, None], p, prefix)
+            return out, {"k": k_cache, "v": v_cache}
+        if ctx.kv_split_axis is not None and ctx.mesh is not None:
+            # scatter + attention inside the sharded island so the cache
+            # never leaves its (batch, seq-split) layout
+            o, k_cache, v_cache = split_kv_decode(
+                qd, cache["k"], cache["v"], cache_len, mesh=ctx.mesh,
+                split_axis=ctx.kv_split_axis, batch_axis=ctx.batch_axes,
+                window=window, impl=ctx.impl,
+                k_new=k[:, 0], v_new=v[:, 0])
+        else:
+            bidx = jnp.arange(B)
+            k_cache = cache["k"].at[bidx, cache_len].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, cache_len].set(
+                v[:, 0].astype(cache["v"].dtype))
+            o = ops.decode_attention(qd, k_cache, v_cache, cache_len + 1,
+                                     window=window, impl=ctx.impl)
+        out = out_proj(o[:, None], p, prefix)
+        return out, {"k": k_cache, "v": v_cache}
+
+    if mode == "cross_decode":
+        # cross attention with a fixed precomputed cache (whisper decoder)
+        assert cache is not None
+        S_x = cache["k"].shape[1]
+        lengths = jnp.full((B,), S_x, jnp.int32)
+        qd = q[:, 0]
+        o = ops.decode_attention(qd, cache["k"], cache["v"], lengths,
+                                 impl=ctx.impl)
+        return out_proj(o[:, None], p, prefix), cache
+
+    # train / prefill / encoder self-attention / cross-attention
+    if mode == "cross":
+        # q from x; k/v from the "cache" (precomputed cross KV)
+        o = ops.attention(q, cache["k"], cache["v"],
+                          q_pos=pos2d,
+                          kv_pos=jnp.arange(cache["k"].shape[1], dtype=jnp.int32),
+                          causal=False, impl=ctx.impl)
+        return out_proj(o, p, prefix), cache
+
+    k_self, v_self = k, v
+    kv_pos = pos2d
+    if history is not None:
+        dtype = k.dtype
+        k = jnp.concatenate([history["k"].astype(dtype), k], axis=1)
+        v = jnp.concatenate([history["v"].astype(dtype), v], axis=1)
+        hpos = history["pos"]
+        if hpos.ndim == 1:
+            hpos = jnp.broadcast_to(hpos[None], (B, hpos.shape[0]))
+        kv_pos = jnp.concatenate([hpos, pos2d], axis=1)
+
+    sp_ok = (ctx.sp_axis is not None and ctx.mesh is not None
+             and S % ctx.axis_size(ctx.sp_axis) == 0
+             and k.shape[1] % ctx.axis_size(ctx.sp_axis) == 0)
+    if sp_ok:
+        o = ring_attention(q, k, v, pos2d, kv_pos, mesh=ctx.mesh,
+                           sp_axis=ctx.sp_axis, head_axis=h_ax,
+                           kv_head_axis=kv_ax, batch_axis=ctx.pod_axis,
+                           causal=causal, window=window,
+                           impl=ctx.impl,
+                           zigzag_skip=(ctx.zigzag_skip and history is None))
+    else:
+        o = ops.attention(q, k, v, pos2d, kv_pos, causal=causal,
+                          window=window, impl=ctx.impl)
+    out = out_proj(o, p, prefix)
+    new_cache = {"k": k_self, "v": v_self} if mode == "prefill" else None
+    return out, new_cache

@@ -1,0 +1,114 @@
+"""Basic transformer layers: norms, rotary embeddings, MLP variants.
+
+All functions are pure; parameters are plain dict pytrees created in
+``params.py``.  Computation dtype follows the input; parameters are cast at
+call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim_rot: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotary embedding (half-dim)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim_rot, 2, dtype=jnp.float32)
+                            / head_dim_rot))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., 2*half); split into even/odd interleave-free halves (GPT-NeoX
+    # style: first half / second half).
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (B, S, H, D). positions: (B, S) int32, or (3, B, S) for M-RoPE.
+    Supports: standard, partial (chatglm: rotary on the first
+    ``partial_rotary_factor`` of head_dim), mrope (qwen2-vl 3-section).
+    """
+    if cfg.rope_type == "none":
+        return x
+    dh = x.shape[-1]
+    rot = int(dh * cfg.partial_rotary_factor) if cfg.rope_type == "partial" else dh
+    rot = (rot // 2) * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, cfg.rope_theta)                      # (rot/2,)
+
+    if cfg.rope_type == "mrope":
+        # positions: (3, B, S) — temporal / height / width components.
+        assert positions.ndim == 3, "mrope needs (3, B, S) positions"
+        ang = positions[..., None].astype(jnp.float32) * inv   # (3, B, S, rot/2)
+        import numpy as np
+        secs = np.asarray(cfg.mrope_sections, dtype=np.float64)
+        # scale sections to rot/2 like HF qwen2-vl (sections given for dh=128)
+        scale = (rot // 2) / secs.sum()
+        bounds = np.cumsum((secs * scale).astype(np.int32))
+        idx = np.arange(rot // 2)
+        sect = (idx[None, :] >= bounds[:, None]).sum(axis=0)   # (rot/2,) in {0,1,2}
+        sect = jnp.asarray(np.clip(sect, 0, 2))
+        one_hot = jax.nn.one_hot(sect, 3, dtype=ang.dtype)     # (rot/2, 3)
+        ang = jnp.einsum("tbsk,kt->bsk", ang, one_hot)         # (B, S, rot/2)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, rot/2)
+
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)          # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    out = _rotate(x_rot, cos, sin)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp(x: jax.Array, p: dict, mlp_type: str) -> jax.Array:
+    """Position-wise FFN. p holds 'wi'/'wo' (+ 'wg' for swiglu)."""
+    dtype = x.dtype
+    if mlp_type == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+        up = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+        h = jax.nn.silu(gate) * up
+    elif mlp_type == "relu2":                                  # nemotron-4
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":                                   # whisper
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(mlp_type)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------- embeddings
+def embed(tokens: jax.Array, table: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+
+
+def learned_pos(positions: jax.Array, table: jax.Array, dtype) -> jax.Array:
+    if positions.ndim == 3:
+        positions = positions[0]
+    return jnp.take(table, jnp.clip(positions, 0, table.shape[0] - 1),
+                    axis=0).astype(dtype)

@@ -1,0 +1,88 @@
+"""Execution context: mesh axes + sharding helpers for the model code.
+
+The forward pass is written against GSPMD (pjit + sharding constraints) with
+shard_map "islands" for the communication-structured pieces (ring attention,
+split-KV decode, sequence-parallel SSD).  The ExecContext tells the model
+which mesh axes play which role; with ``mesh=None`` everything degrades to
+plain single-device execution (CPU tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ExecContext:
+    mesh: Optional[jax.sharding.Mesh] = None
+    dp_axis: Optional[str] = None        # batch
+    sp_axis: Optional[str] = None        # sequence (ring attention / sp-SSD)
+    tp_axis: Optional[str] = None        # tensor parallel
+    kv_split_axis: Optional[str] = None  # decode split-KV
+    pod_axis: Optional[str] = None       # multi-pod outer data axis
+    impl: Optional[str] = None           # kernel impl override
+    remat: bool = False
+    window: Optional[int] = None         # runtime SWA override (long_500k)
+    # unroll the layer scan into straight-line HLO — used by the dry-run
+    # cost extraction (XLA cost_analysis counts a while body only once)
+    unroll_scan: bool = False
+    # zigzag causal-skip ring attention (beyond-paper perf; only valid when
+    # the prefill storage layout is zigzag — see core/ring_attention.py)
+    zigzag_skip: bool = False
+    # sliding-window decode reads only the window region of the cache
+    # (beyond-paper perf for long_500k; the full buffer is still written)
+    window_slice: bool = False
+    # gather/scatter MoE dispatch instead of one-hot einsums (beyond-paper
+    # perf: kills the O(g*E*C*d) dispatch matmul flops)
+    moe_gather_dispatch: bool = False
+    # ring-buffer SWA decode cache: store only the last `window` tokens
+    # (beyond-paper perf for long_500k; supersedes window_slice, which is
+    # refuted at scale — slicing a sharded dim all-gathers the cache)
+    ring_cache: bool = False
+    # 2D weight sharding (model x data) for small-batch decode: cuts
+    # per-chip weight streaming n_data-fold at the cost of tiny per-layer
+    # activation psums (beyond-paper perf for long_500k)
+    shard2d_weights: bool = False
+    # expert parallelism: experts sharded over the data axis, tokens
+    # all_to_all'd to their experts (requires n_experts % axis size == 0)
+    moe_ep: bool = False
+
+    def moe_ep_axis(self) -> Optional[str]:
+        if not self.moe_ep or self.mesh is None:
+            return None
+        if "data" in self.mesh.axis_names:
+            return "data"
+        return self.dp_axis or self.sp_axis
+
+    # ----------------------------------------------------------- helpers
+    def axis_size(self, axis: Optional[str]) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[axis]
+
+    def shardable(self, dim: int, axis: Optional[str]) -> Optional[str]:
+        """Return ``axis`` if ``dim`` divides evenly over it, else None."""
+        n = self.axis_size(axis)
+        return axis if (axis is not None and n > 1 and dim % n == 0) else None
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def batch_axes(self):
+        """Axes over which the batch dim is sharded (pod major)."""
+        axes = tuple(a for a in (self.pod_axis, self.dp_axis) if a is not None)
+        return axes if axes else None
+
+    def with_(self, **kw) -> "ExecContext":
+        return replace(self, **kw)
+
+
+CPU_CTX = ExecContext()

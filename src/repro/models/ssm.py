@@ -1,0 +1,118 @@
+"""Mamba-2 (SSD) mixer block.
+
+Projections -> short causal depthwise conv over (x, B, C) -> SSD scan ->
+gated RMSNorm -> output projection.  The SSD scan dispatches to the
+sequence-parallel shard_map path when ctx.sp_axis is set (prefill/train with
+a contiguously sharded sequence) and to the Pallas/jnp chunked kernel
+otherwise.  Decode keeps a (conv window, SSD state) cache per layer.
+
+The causal conv is written as ``lax.conv_general_dilated`` so GSPMD inserts
+halo exchanges when the sequence dim is sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ring_attention import sp_ssd
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import ExecContext
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, ch); w: (K, ch); b: (ch,).
+
+    ``init``: (B, K-1, ch) carry-in from a previous CDSP chunk (or decode
+    window); default zeros (sequence start)."""
+    B, S, ch = x.shape
+    K = w.shape[0]
+    if init is None:
+        init = jnp.zeros((B, K - 1, ch), x.dtype)
+    xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch)
+    return out + b.astype(x.dtype)
+
+
+def mamba_block(x: jax.Array, p: dict, cfg: ModelConfig, ctx: ExecContext,
+                mode: str, cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d).  Returns (out, new_cache)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    dtype = x.dtype
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    G, N = s.ngroups, s.d_state
+    conv_ch = d_in + 2 * G * N
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dtype))       # (B,S,d_in)
+    xbc = jnp.einsum("bsd,de->bse", x, p["wxbc"].astype(dtype))   # (B,S,conv_ch)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                       # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+
+    if mode == "decode":
+        assert cache is not None
+        conv_state = cache["conv"]                                # (B,K-1,ch)
+        xbc_in = jnp.concatenate([conv_state.astype(dtype), xbc], axis=1)
+        new_conv = xbc_in[:, 1:]
+        w = p["conv_w"].astype(dtype)                             # (K,ch)
+        conv_out = jnp.einsum("bkc,kc->bc", xbc_in, w) + p["conv_b"].astype(dtype)
+        xbc_c = jax.nn.silu(conv_out)[:, None]                    # (B,1,ch)
+    else:
+        prev = None if cache is None else cache.get("conv")
+        xbc_c = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                         init=prev))
+        # next conv window = last K-1 inputs INCLUDING the carried window
+        # (chunks shorter than K-1 must not truncate it)
+        hist = xbc if prev is None else jnp.concatenate(
+            [prev.astype(dtype), xbc], axis=1)
+        if hist.shape[1] < s.d_conv - 1:
+            hist = jnp.concatenate(
+                [jnp.zeros((B, s.d_conv - 1 - hist.shape[1], conv_ch),
+                           dtype), hist], axis=1)
+        new_conv = hist[:, -(s.d_conv - 1):]                      # (B,K-1,ch)
+
+    xs = xbc_c[..., :d_in].reshape(B, -1, H, s.head_dim)
+    Bm = xbc_c[..., d_in:d_in + G * N].reshape(B, -1, G, N)
+    Cm = xbc_c[..., d_in + G * N:].reshape(B, -1, G, N)
+
+    if mode == "decode":
+        y, h_new = ops.ssd_decode(xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                  cache["ssm"])
+        y = y[:, None]                                            # (B,1,H,P)
+    else:
+        h0 = None if cache is None else cache.get("ssm")
+        if (ctx.sp_axis is not None and ctx.mesh is not None
+                and xs.shape[1] % ctx.axis_size(ctx.sp_axis) == 0
+                and (xs.shape[1] // ctx.axis_size(ctx.sp_axis))
+                % min(s.chunk_size, xs.shape[1]) == 0):
+            head_ax = ctx.shardable(H, ctx.tp_axis) if G == 1 else None
+            y, h_new = sp_ssd(xs, dt, A, Bm, Cm, mesh=ctx.mesh,
+                              sp_axis=ctx.sp_axis, chunk=s.chunk_size,
+                              h0=h0, head_axis=head_ax,
+                              batch_axis=ctx.pod_axis, impl=ctx.impl)
+        else:
+            y, h_new = ops.ssd(xs, dt, A, Bm, Cm, h0=h0,
+                               chunk=min(s.chunk_size, S), impl=ctx.impl)
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, -1, d_in).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wout"].astype(dtype))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv.astype(dtype), "ssm": h_new}
+    return out, new_cache

@@ -1,0 +1,73 @@
+"""Paged KV-cache block manager (PagedAttention-style accounting).
+
+Tracks physical cache blocks per decode instance plus Llumnix-style
+"virtual usage": slots reserved for requests whose KV is still in flight
+from the prefill pool (Sec. 5.2).  The freeness rate used by the decode
+router is (free - virtual) / active_batch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class BlockManager:
+    total_blocks: int
+    block_size: int = 256
+    free_blocks: Optional[List[int]] = None
+    allocs: Dict[int, List[int]] = field(default_factory=dict)
+    virtual_tokens: Dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.free_blocks is None:
+            self.free_blocks = list(range(self.total_blocks))
+
+    # ------------------------------------------------------------- queries
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_blocks)
+
+    @property
+    def virtual_blocks(self) -> int:
+        return sum(self.blocks_for(t) for t in self.virtual_tokens.values())
+
+    def freeness(self, batch_size: int) -> float:
+        return (self.n_free - self.virtual_blocks) / (batch_size + 1.0)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.n_free - self.virtual_blocks
+
+    # ----------------------------------------------------------- lifecycle
+    def reserve_virtual(self, rid: int, n_tokens: int) -> bool:
+        if not self.can_fit(n_tokens):
+            return False
+        self.virtual_tokens[rid] = n_tokens
+        return True
+
+    def commit(self, rid: int) -> List[int]:
+        """Virtual reservation -> physical blocks (transfer complete)."""
+        n = self.virtual_tokens.pop(rid)
+        need = self.blocks_for(n)
+        assert need <= self.n_free, "accounting violated"
+        blocks = [self.free_blocks.pop() for _ in range(need)]
+        self.allocs[rid] = blocks
+        return blocks
+
+    def extend(self, rid: int, n_tokens: int) -> bool:
+        """Grow an allocation to cover n_tokens (decode appends)."""
+        need = self.blocks_for(n_tokens) - len(self.allocs[rid])
+        if need <= 0:
+            return True
+        if need > self.n_free:
+            return False
+        self.allocs[rid] += [self.free_blocks.pop() for _ in range(need)]
+        return True
+
+    def release(self, rid: int) -> None:
+        self.free_blocks += self.allocs.pop(rid, [])
+        self.virtual_tokens.pop(rid, None)

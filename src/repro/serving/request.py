@@ -1,0 +1,50 @@
+"""Request lifecycle objects shared by the simulator and the real engine."""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    QUEUED = 0
+    PREFILL = 1
+    TRANSFER = 2
+    DECODE = 3
+    DONE = 4
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_len: int
+    output_len: int
+    phase: Phase = Phase.QUEUED
+    # metrics
+    prefill_done: Optional[float] = None
+    transfer_done: Optional[float] = None
+    first_token: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+    done: Optional[float] = None
+    # runtime state
+    decode_instance: Optional[int] = None
+    generated: int = 0
+    chunk_plan: Optional[list] = None      # [(length, sp)] actually used
+    instances: tuple = ()                  # prefill instances used
+
+    @property
+    def ttft(self) -> Optional[float]:
+        # paper Sec 2.2: arrival -> finish of prefill computation
+        return None if self.prefill_done is None else \
+            self.prefill_done - self.arrival
+
+    @property
+    def tbts(self) -> List[float]:
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    @property
+    def cache_tokens(self) -> int:
+        return self.prompt_len + self.generated

@@ -1,0 +1,333 @@
+"""Discrete-event simulator of the disaggregated serving cluster.
+
+Reproduces the paper's evaluation harness (Sec. 6 describes the same
+simulator methodology used for the improvement-rate profiler; Sec. 7 stress
+tests are latency-model driven): Poisson arrivals, a prefill SP pool with
+per-instance queues, pluggable prefill scheduling policies (Tetris CDSP /
+single-chunk / LoongServe-greedy / fixed-SP), KV transfer with limited
+backends + handshake FIFO ordering, and decode instances with continuous
+batching and Llumnix-style "virtual usage" routing.
+
+Policies:
+  * ``tetris``          — Algorithm 1 (CDSP) with load-aware improvement rate
+  * ``single_chunk``    — Algorithm 2 only (Fig. 13 ablation)
+  * ``loongserve``      — greedy max-SP per request (rate=0), non-disagg:
+                          decode occupies the SP group (static batching)
+  * ``loongserve_disagg``— greedy single-chunk prefill + disagg decode
+  * ``fixed_sp_N``      — static SP-N groups, shortest-queue routing
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.chunk_planner import Allocation, CDSPScheduler, Chunk
+from repro.core.latency_model import DecodeLatencyModel, PrefillLatencyModel
+from repro.serving.request import Phase, Request
+
+
+@dataclass
+class ClusterSpec:
+    n_prefill: int = 32
+    tp_prefill: int = 1
+    n_decode: int = 4
+    tp_decode: int = 8
+    node_size: int = 8
+    cache_slots: int = 4_000_000         # tokens per decode instance
+    transfer_bw: float = 40e9            # bytes/s per backend
+    kv_bytes_per_token: float = 131_072  # llama3-8b
+    backends_per_decode: int = 8
+    disaggregated: bool = True
+    sp_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16)
+
+
+# ---------------------------------------------------------------- policies
+class Policy:
+    name = "base"
+
+    def __init__(self, model: PrefillLatencyModel, spec: ClusterSpec,
+                 rate_fn: Optional[Callable[[float], float]] = None):
+        self.model = model
+        self.spec = spec
+        self.rate_fn = rate_fn or (lambda now: 0.3)
+        self.sched = CDSPScheduler(
+            model, sp_candidates=[s for s in spec.sp_candidates
+                                  if s <= spec.n_prefill],
+            node_size=spec.node_size)
+
+    def plan(self, req: Request, pool: Dict[int, float], now: float
+             ) -> Optional[Allocation]:
+        raise NotImplementedError
+
+
+class TetrisPolicy(Policy):
+    name = "tetris"
+
+    def plan(self, req, pool, now):
+        return self.sched.schedule(req.prompt_len, pool,
+                                   improvement_rate=self.rate_fn(now))
+
+
+class DynamicTetrisPolicy(Policy):
+    """Tetris with the paper's online improvement-rate controller: a
+    sliding-window arrival-rate estimate indexes the offline-profiled
+    optimal-rate table (Sec. 5.1 / Sec. 6)."""
+    name = "tetris_dynamic"
+
+    def __init__(self, model, spec, controller):
+        super().__init__(model, spec)
+        self.controller = controller
+
+    def plan(self, req, pool, now):
+        self.controller.observe(now)
+        return self.sched.schedule(req.prompt_len, pool,
+                                   improvement_rate=self.controller.rate(now))
+
+
+class SingleChunkPolicy(Policy):
+    """Algorithm 2 only — skips lines 5-21 of Algorithm 1 (Fig. 13)."""
+    name = "single_chunk"
+
+    def plan(self, req, pool, now):
+        group = self.sched.single_chunk_schedule(
+            req.prompt_len, Allocation(), self.sched.sp_candidates, pool,
+            improvement_rate=self.rate_fn(now))
+        if group is None:
+            return None
+        t_q = max((pool[i] for i in group), default=0.0)
+        t_p = self.model.latency(len(group), 0, req.prompt_len)
+        return Allocation([Chunk(req.prompt_len, group, t_q, t_q + t_p)])
+
+
+class LoongServePolicy(Policy):
+    """Greedy ESP: largest-gain SP with no load-aware gate (rate=0)."""
+    name = "loongserve"
+
+    def plan(self, req, pool, now):
+        group = self.sched.single_chunk_schedule(
+            req.prompt_len, Allocation(), self.sched.sp_candidates, pool,
+            improvement_rate=0.0)
+        if group is None:
+            return None
+        t_q = max((pool[i] for i in group), default=0.0)
+        t_p = self.model.latency(len(group), 0, req.prompt_len)
+        return Allocation([Chunk(req.prompt_len, group, t_q, t_q + t_p)])
+
+
+class FixedSPPolicy(Policy):
+    def __init__(self, model, spec, sp: int, rate_fn=None):
+        super().__init__(model, spec, rate_fn)
+        self.sp = sp
+        self.name = f"fixed_sp_{sp}"
+        n_groups = spec.n_prefill // sp
+        self.groups = [tuple(range(g * sp, (g + 1) * sp))
+                       for g in range(n_groups)]
+
+    def plan(self, req, pool, now):
+        best, best_t = None, float("inf")
+        for g in self.groups:
+            t_q = max(pool[i] for i in g)
+            if t_q < best_t:
+                best, best_t = g, t_q
+        t_p = self.model.latency(self.sp, 0, req.prompt_len)
+        return Allocation([Chunk(req.prompt_len, best, best_t,
+                                 best_t + t_p)])
+
+
+def make_policy(name: str, model: PrefillLatencyModel, spec: ClusterSpec,
+                rate_fn=None) -> Policy:
+    if name == "tetris":
+        return TetrisPolicy(model, spec, rate_fn)
+    if name == "single_chunk":
+        return SingleChunkPolicy(model, spec, rate_fn)
+    if name in ("loongserve", "loongserve_disagg"):
+        p = LoongServePolicy(model, spec, rate_fn)
+        p.name = name
+        return p
+    if name.startswith("fixed_sp_"):
+        return FixedSPPolicy(model, spec, int(name.rsplit("_", 1)[1]), rate_fn)
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------- simulator
+@dataclass
+class DecodeInstance:
+    did: int
+    slots_free: int
+    virtual: int = 0                       # reserved during transfer
+    batch: List[Request] = field(default_factory=list)
+    ticking: bool = False
+    backends_free: int = 8
+    transfer_queue: List[Tuple[float, Request]] = field(default_factory=list)
+
+    def freeness(self) -> float:
+        return (self.slots_free - self.virtual) / (len(self.batch) + 1.0)
+
+
+class Simulator:
+    def __init__(self, spec: ClusterSpec, policy: Policy,
+                 decode_model: Optional[DecodeLatencyModel] = None):
+        self.spec = spec
+        self.policy = policy
+        self.decode_model = decode_model or DecodeLatencyModel()
+        self.free_at = {i: 0.0 for i in range(spec.n_prefill)}
+        self.decodes = [DecodeInstance(d, spec.cache_slots,
+                                       backends_free=spec.backends_per_decode)
+                        for d in range(spec.n_decode)]
+        self.events: list = []
+        self.counter = itertools.count()
+        self.reqs: Dict[int, Request] = {}
+        self.rejected: List[int] = []
+
+    # ------------------------------------------------------------- events
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self.events, (t, next(self.counter), kind, payload))
+
+    def run(self, requests: List[Request], horizon: float = float("inf")
+            ) -> Dict[int, Request]:
+        for r in requests:
+            self.reqs[r.rid] = r
+            self._push(r.arrival, "arrive", r.rid)
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if t > horizon:
+                break
+            getattr(self, f"_on_{kind}")(t, payload)
+        return self.reqs
+
+    # ------------------------------------------------------------ prefill
+    def _pool_view(self, now: float) -> Dict[int, float]:
+        return {i: max(0.0, fa - now) for i, fa in self.free_at.items()}
+
+    def _on_arrive(self, now: float, rid: int) -> None:
+        req = self.reqs[rid]
+        alloc = self.policy.plan(req, self._pool_view(now), now)
+        if alloc is None:
+            self.rejected.append(rid)
+            return
+        req.phase = Phase.PREFILL
+        req.chunk_plan = [(c.length, c.sp) for c in alloc.chunks]
+        req.instances = alloc.instances
+        for c in alloc.chunks:
+            for i in c.instances:
+                self.free_at[i] = max(self.free_at[i], now + c.t_end)
+        req.prefill_done = now + alloc.ttft
+        self._push(req.prefill_done, "prefill_done", rid)
+
+    def _on_prefill_done(self, now: float, rid: int) -> None:
+        req = self.reqs[rid]
+        if not self.spec.disaggregated:
+            # LoongServe static batching: decode occupies the SP group
+            sp = req.chunk_plan[-1][1]
+            total = 0.0
+            cache = req.prompt_len
+            times = []
+            for _ in range(req.output_len):
+                dt = self.decode_model.latency(1, cache, sp=sp,
+                                               tp=self.spec.tp_prefill)
+                total += dt
+                cache += 1
+                times.append(now + total)
+            req.token_times = times
+            req.first_token = times[0]
+            req.done = times[-1]
+            req.generated = req.output_len
+            req.phase = Phase.DONE
+            # static batching: the ESP group is blocked for the whole decode
+            for i in req.instances:
+                self.free_at[i] = max(self.free_at[i], req.done)
+            return
+        # disaggregated: route to decode instance (Llumnix virtual usage)
+        req.phase = Phase.TRANSFER
+        need = req.prompt_len + req.output_len
+        cand = [d for d in self.decodes if d.slots_free - d.virtual >= need]
+        if not cand:
+            # wait for slots: retry shortly (memory pressure)
+            self._push(now + 0.05, "prefill_done", rid)
+            return
+        d = max(cand, key=DecodeInstance.freeness)
+        d.virtual += need
+        req.decode_instance = d.did
+        # handshake: acquire a backend or queue FIFO by handshake timestamp
+        if d.backends_free > 0:
+            d.backends_free -= 1
+            self._start_transfer(now, d, req)
+        else:
+            d.transfer_queue.append((now, req))
+
+    def _start_transfer(self, now: float, d: DecodeInstance, req: Request
+                        ) -> None:
+        dur = (req.prompt_len * self.spec.kv_bytes_per_token
+               / self.spec.transfer_bw)
+        self._push(now + dur, "transfer_done", req.rid)
+
+    def _on_transfer_done(self, now: float, rid: int) -> None:
+        req = self.reqs[rid]
+        d = self.decodes[req.decode_instance]
+        req.transfer_done = now
+        # release backend to the FIFO queue
+        if d.transfer_queue:
+            t0, nxt = d.transfer_queue.pop(0)
+            self._start_transfer(now, d, nxt)
+        else:
+            d.backends_free += 1
+        # join continuous batch
+        need = req.prompt_len + req.output_len
+        d.virtual -= need
+        d.slots_free -= need
+        req.phase = Phase.DECODE
+        d.batch.append(req)
+        if not d.ticking:
+            d.ticking = True
+            self._push(now, "decode_tick", d.did)
+
+    def _on_decode_tick(self, now: float, did: int) -> None:
+        d = self.decodes[did]
+        if not d.batch:
+            d.ticking = False
+            return
+        cache = sum(r.cache_tokens for r in d.batch)
+        dt = self.decode_model.latency(len(d.batch), cache, sp=1,
+                                       tp=self.spec.tp_decode)
+        t_next = now + dt
+        finished = []
+        for r in d.batch:
+            r.generated += 1
+            r.token_times.append(t_next)
+            if r.first_token is None:
+                r.first_token = t_next
+            if r.generated >= r.output_len:
+                finished.append(r)
+        for r in finished:
+            d.batch.remove(r)
+            d.slots_free += r.prompt_len + r.output_len
+            r.phase = Phase.DONE
+            r.done = t_next
+        self._push(t_next, "decode_tick", did)
+
+
+# ---------------------------------------------------------------- metrics
+def percentile(vals: List[float], p: float) -> float:
+    return float(np.percentile(vals, p)) if vals else float("nan")
+
+
+def summarize(reqs: Dict[int, Request]) -> dict:
+    done = [r for r in reqs.values() if r.prefill_done is not None]
+    ttfts = [r.ttft for r in done]
+    tbts = [tb for r in done for tb in r.tbts]
+    finished = [r for r in done if r.done is not None]
+    toks = sum(r.generated for r in finished)
+    span = (max(r.done for r in finished) - min(r.arrival for r in finished)
+            if finished else float("nan"))
+    return {
+        "n": len(done),
+        "ttft_p50": percentile(ttfts, 50), "ttft_p99": percentile(ttfts, 99),
+        "ttft_mean": float(np.mean(ttfts)) if ttfts else float("nan"),
+        "tbt_p50": percentile(tbts, 50), "tbt_p99": percentile(tbts, 99),
+        "throughput_tok_s": toks / span if span and span > 0 else float("nan"),
+    }

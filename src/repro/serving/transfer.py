@@ -1,0 +1,81 @@
+"""Handshake-based CDSP cache-transfer management (Sec. 4.2).
+
+With CDSP, one request's KV chunks live on *multiple* prefill instance
+groups; the decode side can only start once every chunk has arrived, and
+transfer backends (buffer-backed channels) are scarce.  The manager
+implements the paper's handshake protocol: a send manager announces each
+chunk; if the receive engine has a free backend the transfer launches
+immediately, otherwise requests are ordered by FIRST handshake timestamp and
+backends are dedicated to one request until all of its chunks have landed —
+preventing backend starvation from stranding partially-transferred caches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class _ReqState:
+    first_handshake: float
+    pending_chunks: List[Tuple[int, float]] = field(default_factory=list)
+    chunks_left: int = 0
+    backend: Optional[int] = None
+
+
+class TransferManager:
+    """Receive-side manager for one decode instance."""
+
+    def __init__(self, n_backends: int, bandwidth: float = 40e9):
+        self.n_backends = n_backends
+        self.bandwidth = bandwidth
+        self.free_backends = list(range(n_backends))
+        self.states: Dict[int, _ReqState] = {}
+        self.waiting: List[int] = []          # rids ordered by 1st handshake
+        self.active: Dict[int, int] = {}      # backend -> rid
+        self.completed: List[int] = []
+        self.stats = {"handshakes": 0, "queued": 0, "transfers": 0}
+
+    # ---------------------------------------------------------- handshake
+    def handshake(self, rid: int, n_chunks: int, chunk_bytes: List[float],
+                  now: float) -> None:
+        """Prefill side announces a request's chunk set."""
+        self.stats["handshakes"] += 1
+        st = self.states.get(rid)
+        if st is None:
+            st = _ReqState(first_handshake=now, chunks_left=n_chunks)
+            st.pending_chunks = [(i, b) for i, b in enumerate(chunk_bytes)]
+            self.states[rid] = st
+            if self.free_backends:
+                st.backend = self.free_backends.pop()
+                self.active[st.backend] = rid
+            else:
+                self.stats["queued"] += 1
+                self.waiting.append(rid)
+                self.waiting.sort(key=lambda r: self.states[r].first_handshake)
+
+    # ------------------------------------------------------------ service
+    def transfer_time(self, rid: int) -> float:
+        """Total wire time for the request's remaining chunks."""
+        st = self.states[rid]
+        return sum(b for _, b in st.pending_chunks) / self.bandwidth
+
+    def complete(self, rid: int) -> None:
+        """All chunks of ``rid`` have landed; recycle its backend in
+        first-handshake order."""
+        st = self.states.pop(rid)
+        self.completed.append(rid)
+        self.stats["transfers"] += 1
+        if st.backend is not None:
+            if self.waiting:
+                nxt = self.waiting.pop(0)
+                self.states[nxt].backend = st.backend
+                self.active[st.backend] = nxt
+            else:
+                self.active.pop(st.backend, None)
+                self.free_backends.append(st.backend)
+
+    def has_backend(self, rid: int) -> bool:
+        st = self.states.get(rid)
+        return st is not None and st.backend is not None

@@ -1,0 +1,66 @@
+"""Minimal dependency-free checkpointing: params/opt-state pytrees as .npz.
+
+Leaves are saved host-side with flattened key paths; restore rebuilds the
+tree and re-shards via device_put when a sharding tree is supplied.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):                  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k), f"{prefix}{k}/")
+                                for k in tree._fields))
+        arr = data[prefix[:-1]]
+        return jnp.asarray(arr, dtype=tree.dtype if hasattr(tree, "dtype")
+                           else None)
+
+    tree = rebuild(like)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def latest_step(path: str) -> Optional[int]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,75 @@
+"""Training loop: loss, train_step factory, and a small Trainer driver."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import CPU_CTX, ExecContext
+from repro.models.transformer import forward
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import AdamW, AdamWState
+
+AUX_LOSS_WEIGHT = 0.01     # MoE load-balance coefficient
+
+
+def loss_fn(params: dict, cfg: ModelConfig, ctx: ExecContext,
+            batch: Dict[str, jax.Array]):
+    logits, aux, _ = forward(params, cfg, ctx, batch["tokens"],
+                             batch["positions"], "train",
+                             encoder_frames=batch.get("encoder_frames"))
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None].astype(
+        jnp.int32), axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    return ce + AUX_LOSS_WEIGHT * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, ctx: ExecContext, opt: AdamW
+                    ) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch):
+        (_, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, ctx, batch)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": ce, "aux": aux, "gnorm": gnorm}
+    return train_step
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    params: dict
+    ctx: ExecContext = CPU_CTX
+    opt: AdamW = field(default_factory=AdamW)
+    ckpt_path: Optional[str] = None
+    ckpt_every: int = 0
+
+    def __post_init__(self):
+        self.opt_state = self.opt.init(self.params)
+        self.step_fn = jax.jit(make_train_step(self.cfg, self.ctx, self.opt))
+        self.history = []
+
+    def fit(self, data: SyntheticLM, steps: int, log_every: int = 10
+            ) -> list:
+        t0 = time.time()
+        for step in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+            self.params, self.opt_state, m = self.step_fn(
+                self.params, self.opt_state, batch)
+            if step % log_every == 0 or step == steps - 1:
+                rec = {"step": step, "loss": float(m["loss"]),
+                       "gnorm": float(m["gnorm"]),
+                       "wall": time.time() - t0}
+                self.history.append(rec)
+            if self.ckpt_every and self.ckpt_path and \
+                    (step + 1) % self.ckpt_every == 0:
+                from repro.training import checkpoint
+                checkpoint.save(self.ckpt_path,
+                                {"params": self.params}, step=step)
+        return self.history

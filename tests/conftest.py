@@ -1,0 +1,63 @@
+import os
+import sys
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (multi-device coverage lives in subprocess
+# tests under tests/test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_reduced(name: str):
+    from repro.configs.registry import get_config
+    return get_config(name).reduced()
+
+
+@pytest.fixture(scope="session")
+def reduced_params_cache():
+    """Session cache of (cfg, params) per arch to amortise init cost."""
+    from repro.models.params import init_params
+    cache = {}
+
+    def get(name: str):
+        if name not in cache:
+            cfg = make_reduced(name)
+            cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+    return get
+
+
+def positions_for(cfg, B, S, offset: int = 0):
+    import jax.numpy as jnp
+    pos = jnp.arange(offset, offset + S, dtype=jnp.int32)
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(pos[None, None], (3, B, S))
+    return jnp.broadcast_to(pos[None], (B, S))
+
+
+def pad_kv_caches(caches, S, S_max):
+    """Pad attention k/v caches (by key name) to S_max along the seq axis."""
+    import jax.numpy as jnp
+
+    def walk(d):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k in ("k", "v") and v.ndim == 5 and v.shape[2] == S:
+                z = jnp.zeros(v.shape[:2] + (S_max - S,) + v.shape[3:],
+                              v.dtype)
+                out[k] = jnp.concatenate([v, z], axis=2)
+            else:
+                out[k] = v
+        return out
+    return walk(caches)

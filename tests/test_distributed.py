@@ -1,0 +1,41 @@
+"""Multi-device correctness via subprocesses (8 host devices each).
+
+Each program sets XLA_FLAGS before importing jax, which cannot be done
+in-process once the main test session has initialised a 1-device jax."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROGS = os.path.join(os.path.dirname(__file__), "dist_progs")
+
+
+def _run(prog: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, os.path.join(PROGS, prog)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"{prog} failed:\n{out.stdout}\n{out.stderr}"
+    assert "DIST_OK" in out.stdout
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_ring_attention_distributed():
+    _run("ring_attention_prog.py")
+
+
+@pytest.mark.slow
+def test_sharded_model_distributed():
+    _run("sharded_model_prog.py")
+
+
+@pytest.mark.slow
+def test_cdsp_submesh_rebalance():
+    """Chunk on SP=2 group -> KV rebalance (device_put reshard) -> chunk on
+    SP=4 superset group == monolithic prefill (paper Sec. 4.1)."""
+    _run("cdsp_submesh_prog.py")

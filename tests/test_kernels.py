@@ -1,0 +1,178 @@
+"""Pallas kernel validation: interpret-mode sweeps vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels import ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KVH,D", [
+    (1, 128, 128, 1, 1, 32),
+    (2, 256, 256, 4, 2, 64),
+    (2, 128, 384, 8, 8, 64),     # MHA, Sq != Sk (CDSP chunk w/ history)
+    (1, 512, 512, 4, 1, 128),    # MQA, head_dim 128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, KVH, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, D), dtype)
+    k = _rand(ks[1], (B, Sk, KVH, D), dtype)
+    v = _rand(ks[2], (B, Sk, KVH, D), dtype)
+    # chunked-prefill style positions: queries sit AFTER the kv prefix
+    q_pos = jnp.arange(Sk - Sq, Sk, dtype=jnp.int32)
+    kv_pos = jnp.arange(Sk, dtype=jnp.int32)
+    got, lse_got = flash_attention(q, k, v, q_pos, kv_pos, causal=True,
+                                   interpret=True, with_lse=True)
+    want, lse_want = ref.attention_ref(q, k, v, q_pos, kv_pos, causal=True,
+                                       with_lse=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(lse_got, lse_want, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    B, S, H, D = 2, 256, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (_rand(ks[i], (B, S, H if i == 0 else 2, D), jnp.float32)
+               for i in range(3))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    got = flash_attention(q, k, v, pos, pos, causal=True, window=window,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, pos, pos, causal=True, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_zigzag_positions():
+    """Kernel masking must be correct for non-contiguous (zigzag) layouts."""
+    from repro.core.zigzag import zigzag_positions, zigzag_shard, zigzag_unshard
+    B, S, H, D, N = 1, 256, 2, 32, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (_rand(ks[i], (B, S, H, D), jnp.float32) for i in range(3))
+    pos = zigzag_positions(S, N)
+    got = flash_attention(zigzag_shard(q, N), zigzag_shard(k, N),
+                          zigzag_shard(v, N), pos, pos, causal=True,
+                          interpret=True)
+    got = zigzag_unshard(got, N)
+    want = ref.attention_ref(q, k, v, jnp.arange(S), jnp.arange(S))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,KVH,D", [
+    (2, 256, 4, 2, 64), (3, 512, 8, 8, 64), (1, 1024, 8, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, S, H, KVH, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = _rand(ks[0], (B, H, D), dtype)
+    k = _rand(ks[1], (B, S, KVH, D), dtype)
+    v = _rand(ks[2], (B, S, KVH, D), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got, lg = flash_decode(q, k, v, lens, interpret=True, with_lse=True)
+    want, lw = ref.decode_attention_ref(q, k, v, lens, with_lse=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(lg, lw, atol=1e-3, rtol=1e-3)
+
+
+def test_flash_decode_window():
+    B, S, H, KVH, D = 2, 512, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KVH, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KVH, D), jnp.float32)
+    lens = jnp.array([400, 512])
+    got = flash_decode(q, k, v, lens, window=128, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, window=128)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 16, 2, 32, 32),
+    (2, 256, 8, 32, 1, 64, 64),
+])
+def test_ssd_scan_sweep(B, S, H, P, G, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = _rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(_rand(ks[2], (H,), jnp.float32))
+    Bm = _rand(ks[3], (B, S, G, N), jnp.float32)
+    Cm = _rand(ks[4], (B, S, G, N), jnp.float32)
+    h0 = _rand(ks[5], (B, H, P, N), jnp.float32)
+    y0, h_f0 = ref.ssd_ref(x, dt, A, Bm, Cm, h0=h0, return_state=True)
+    y1, h_f1 = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+                                   return_state=True)
+    y2, h_f2 = ssd_scan(x, dt, A, Bm, Cm, h0=h0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(y1, y0, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(y2, y0, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h_f1, h_f0, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h_f2, h_f0, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_decode_matches_scan_step():
+    B, H, P, G, N = 2, 4, 16, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    S = 8
+    x = _rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(_rand(ks[2], (H,), jnp.float32))
+    Bm = _rand(ks[3], (B, S, G, N), jnp.float32)
+    Cm = _rand(ks[4], (B, S, G, N), jnp.float32)
+    y_all, h = ref.ssd_ref(x, dt, A, Bm, Cm, return_state=True)
+    # replay the same sequence one token at a time
+    state = jnp.zeros((B, H, P, N))
+    for t in range(S):
+        y_t, state = ref.ssd_decode_ref(x[:, t], dt[:, t], A, Bm[:, t],
+                                        Cm[:, t], state)
+        np.testing.assert_allclose(y_t, y_all[:, t], atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(state, h, atol=2e-4, rtol=2e-4)
+
+
+def test_attention_ref_blocked_equals_plain():
+    B, S, H, D = 2, 300, 4, 32           # deliberately not a block multiple
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (B, S, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, 2, D), jnp.float32)
+    v = _rand(ks[2], (B, S, 2, D), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a, la = ref.attention_ref_blocked(q, k, v, pos, pos, with_lse=True,
+                                      block_q=128)
+    b, lb = ref.attention_ref(q, k, v, pos, pos, with_lse=True)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(la, lb, atol=1e-4, rtol=1e-4)
+
+
+def test_merge_partials_property():
+    """Merging disjoint KV shards == attention over the full KV."""
+    B, S, H, D = 2, 128, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = _rand(ks[0], (B, 16, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, H, D), jnp.float32)
+    v = _rand(ks[2], (B, S, H, D), jnp.float32)
+    q_pos = jnp.arange(S - 16, S, dtype=jnp.int32)
+    outs, lses = [], []
+    for i in range(4):
+        sl = slice(i * 32, (i + 1) * 32)
+        o, l = ref.attention_ref(q, k[:, sl], v[:, sl], q_pos,
+                                 jnp.arange(i * 32, (i + 1) * 32),
+                                 causal=True, with_lse=True)
+        outs.append(o)
+        lses.append(l)
+    got, _ = ref.merge_partials(outs, lses)
+    want = ref.attention_ref(q, k, v, q_pos, jnp.arange(S), causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)

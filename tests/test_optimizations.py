@@ -1,0 +1,108 @@
+"""Beyond-paper §Perf optimizations must be numerically transparent:
+gather-dispatch MoE, windowed decode, zigzag-skip ring attention (the last
+is covered distributed in tests/dist_progs/ring_attention_prog.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_reduced, pad_kv_caches, positions_for
+from repro.models.params import init_params
+from repro.models.sharding import CPU_CTX
+from repro.models.transformer import forward
+
+B, S = 2, 64
+
+
+@pytest.mark.parametrize("name", ["mixtral-8x22b", "qwen2-moe-a2.7b",
+                                  "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("cf", [None, 0.25])
+def test_moe_gather_dispatch_equals_einsum(name, cf):
+    cfg = make_reduced(name)
+    if cf is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    pos = positions_for(cfg, B, S)
+    a, aux_a, _ = forward(params, cfg, CPU_CTX, tokens, pos, "train")
+    ctx = CPU_CTX.with_(moe_gather_dispatch=True)
+    b, aux_b, _ = forward(params, cfg, ctx, tokens, pos, "train")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(float(aux_a), float(aux_b), rtol=1e-5)
+
+
+def test_moe_gather_dispatch_grads_match():
+    cfg = make_reduced("mixtral-8x22b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    pos = positions_for(cfg, B, S)
+
+    def loss(params, ctx):
+        logits, _, _ = forward(params, cfg, ctx, tokens, pos, "train")
+        return jnp.mean(jnp.square(logits.astype(jnp.float32)))
+
+    g_a = jax.grad(loss)(params, CPU_CTX)
+    g_b = jax.grad(loss)(params, CPU_CTX.with_(moe_gather_dispatch=True))
+    for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-2)
+
+
+def test_windowed_decode_equals_full():
+    cfg = dataclasses.replace(make_reduced("yi-9b"), sliding_window=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    S_max = 128
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 48), 0,
+                                cfg.vocab_size)
+    pos = positions_for(cfg, B, 48)
+    plog, _, caches = forward(params, cfg, CPU_CTX, tokens, pos, "prefill")
+    caches = pad_kv_caches(caches, 48, S_max)
+    ntok = jnp.argmax(plog[:, 0, :cfg.vocab_size], -1)[:, None].astype(
+        jnp.int32)
+    clen = jnp.full((B,), 48, jnp.int32)
+    base, _, c_base = forward(params, cfg, CPU_CTX, ntok, clen[:, None],
+                              "decode", caches=caches, cache_len=clen)
+    ctx = CPU_CTX.with_(window_slice=True, window=8)
+    fast, _, c_fast = forward(params, cfg, ctx, ntok, clen[:, None],
+                              "decode", caches=caches, cache_len=clen)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fast),
+                               atol=1e-4, rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(c_base), jax.tree.leaves(c_fast)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_windowed_decode_multi_step():
+    """Several windowed decode steps == full-cache decode steps."""
+    cfg = dataclasses.replace(make_reduced("mixtral-8x22b"),
+                              sliding_window=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    S0, S_max = 40, 128
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S0), 0,
+                                cfg.vocab_size)
+    pos = positions_for(cfg, B, S0)
+    plog, _, caches = forward(params, cfg, CPU_CTX, tokens, pos, "prefill")
+    caches = pad_kv_caches(caches, S0, S_max)
+    ctx = CPU_CTX.with_(window_slice=True, window=8)
+    tok = jnp.argmax(plog[:, 0, :cfg.vocab_size], -1)[:, None].astype(
+        jnp.int32)
+    ca, cb = caches, caches
+    ta = tb = tok
+    clen = jnp.full((B,), S0, jnp.int32)
+    for _ in range(5):
+        la, _, ca = forward(params, cfg, CPU_CTX, ta, clen[:, None],
+                            "decode", caches=ca, cache_len=clen)
+        lb, _, cb = forward(params, cfg, ctx, tb, clen[:, None],
+                            "decode", caches=cb, cache_len=clen)
+        ta = jnp.argmax(la[:, 0, :cfg.vocab_size], -1)[:, None].astype(
+            jnp.int32)
+        tb = jnp.argmax(lb[:, 0, :cfg.vocab_size], -1)[:, None].astype(
+            jnp.int32)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+        clen = clen + 1

@@ -1,0 +1,141 @@
+"""CDSP scheduler (Algorithms 1-3) — unit + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunk_planner import Allocation, CDSPScheduler
+from repro.core.latency_model import table1_model
+
+MODEL = table1_model()
+
+
+def make_sched(**kw):
+    kw.setdefault("sp_candidates", [1, 2, 4, 8, 16])
+    kw.setdefault("node_size", 8)
+    kw.setdefault("min_chunk_tokens", 1024)
+    kw.setdefault("improvement_rate", 0.1)
+    return CDSPScheduler(MODEL, **kw)
+
+
+def test_paper_motivating_example():
+    """Sec. 2.4 Limitation-3: CDSP fills the fragment left by a 16k@SP8
+    request and beats both single-chunk options for a 128k request."""
+    sched = make_sched(improvement_rate=0.05)
+    t16k = MODEL.latency(8, 0, 16384)
+    pool = {i: (t16k if i < 8 else 0.0) for i in range(16)}
+    alloc = sched.schedule(131072, dict(pool))
+    assert len(alloc.chunks) >= 2, "should chunk"
+    assert alloc.chunks[0].sp < alloc.chunks[-1].sp, "SP must grow"
+    single8 = MODEL.latency(8, 0, 131072)
+    single16 = t16k + MODEL.latency(16, 0, 131072)
+    assert alloc.ttft < min(single8, single16)
+
+
+def test_single_chunk_improvement_gate():
+    """High improvement rate suppresses SP expansion; zero rate greedily
+    takes the fastest."""
+    sched = make_sched()
+    pool = {i: 0.0 for i in range(16)}
+    g_greedy = sched.single_chunk_schedule(131072, Allocation(),
+                                           [1, 2, 4, 8, 16], pool,
+                                           improvement_rate=0.0)
+    g_conservative = sched.single_chunk_schedule(131072, Allocation(),
+                                                 [1, 2, 4, 8, 16], pool,
+                                                 improvement_rate=0.75)
+    assert len(g_greedy) >= len(g_conservative)
+
+
+def test_get_group_nesting():
+    sched = make_sched()
+    pool = {i: float(i) for i in range(32)}
+    g4 = sched.get_group(pool, (), 4)
+    g8 = sched.get_group(pool, g4, 8)
+    g16 = sched.get_group(pool, g8, 16)
+    assert set(g4) <= set(g8) <= set(g16)
+    assert len(g4) == 4 and len(g8) == 8 and len(g16) == 16
+
+
+def test_get_group_intra_node_preference():
+    """A group that fits in one node must come from a single node."""
+    sched = make_sched(node_size=8)
+    pool = {i: 0.0 for i in range(32)}
+    g = sched.get_group(pool, (), 8)
+    assert len({i // 8 for i in g}) == 1
+
+
+def test_apply_updates_queues():
+    sched = make_sched()
+    pool = {i: 0.0 for i in range(16)}
+    alloc = sched.schedule(131072, dict(pool))
+    CDSPScheduler.apply(pool, alloc)
+    for c in alloc.chunks:
+        for i in c.instances:
+            assert pool[i] >= c.t_end - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    L=st.integers(min_value=4096, max_value=262144),
+    queues=st.lists(st.floats(min_value=0.0, max_value=5.0),
+                    min_size=16, max_size=16),
+    rate=st.floats(min_value=0.0, max_value=0.75),
+)
+def test_schedule_invariants(L, queues, rate):
+    sched = make_sched(improvement_rate=rate)
+    pool = {i: q for i, q in enumerate(queues)}
+    alloc = sched.schedule(L, dict(pool))
+    assert alloc is not None
+    # (1) chunk lengths cover the prompt exactly
+    assert alloc.total_length == L
+    # (2) instance groups are nested supersets in chunk order
+    prev = set()
+    for c in alloc.chunks:
+        assert prev <= set(c.instances)
+        prev = set(c.instances)
+    # (3) SP sizes are valid candidates and non-decreasing
+    sps = [c.sp for c in alloc.chunks]
+    assert all(s in sched.sp_candidates for s in sps)
+    assert sps == sorted(sps)
+    # (4) chunks execute back-to-back without overlap
+    for a, b in zip(alloc.chunks, alloc.chunks[1:]):
+        assert b.t_start >= a.t_end - 1e-6
+    # (5) no chunk starts before its instances are free
+    for c in alloc.chunks:
+        assert c.t_start >= max(pool[i] for i in c.instances) - 1e-6
+    # (6) CDSP never loses to the single-chunk plan it starts from
+    group = sched.single_chunk_schedule(L, Allocation(),
+                                        sched.sp_candidates, dict(pool),
+                                        improvement_rate=rate)
+    t_single = (max(pool[i] for i in group)
+                + MODEL.latency(len(group), 0, L))
+    assert alloc.ttft <= t_single + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(min_value=8192, max_value=131072),
+       budget=st.floats(min_value=0.01, max_value=20.0))
+def test_latency_model_solve_roundtrip(L, budget):
+    for sp in MODEL.sp_sizes:
+        l_max = MODEL.solve_chunk_len(sp, 0.0, budget)
+        if l_max <= 0:
+            assert MODEL.latency(sp, 0.0, 1) >= budget - 1e-6
+            continue
+        assert MODEL.latency(sp, 0.0, l_max) <= budget + 1e-5
+        assert MODEL.latency(sp, 0.0, l_max * 1.01 + 1) > budget - 1e-9
+
+
+def test_scheduler_latency_budget():
+    """Table-2-style check: scheduling stays well under 50ms in Python
+    even at SP=128 pools (the paper's C++ hits ~30-90us)."""
+    import time
+    sched = CDSPScheduler(MODEL, sp_candidates=[1, 2, 4, 8, 16],
+                          node_size=8, improvement_rate=0.3)
+    rng = np.random.default_rng(0)
+    pool = {i: float(rng.uniform(0, 3)) for i in range(128)}
+    t0 = time.perf_counter()
+    n = 50
+    for _ in range(n):
+        sched.schedule(int(rng.integers(8192, 200000)), dict(pool))
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 0.25, f"scheduler too slow: {per_call*1e3:.1f}ms"

@@ -1,0 +1,187 @@
+"""Serving components: simulator, cache manager, transfer manager, workload,
+decode routing, improvement-rate controller."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.improvement_rate import DynamicRateController
+from repro.core.latency_model import DecodeLatencyModel, table1_model
+from repro.serving.cache_manager import BlockManager
+from repro.serving.request import Request
+from repro.serving.simulator import (ClusterSpec, Simulator, make_policy,
+                                     summarize)
+from repro.serving.transfer import TransferManager
+from repro.serving.workload import TRACES, make_trace, sample_lengths
+
+MODEL = table1_model()
+
+
+def clone(reqs):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    output_len=r.output_len) for r in reqs]
+
+
+# ------------------------------------------------------------------ workload
+@pytest.mark.parametrize("trace", list(TRACES))
+def test_trace_length_distribution(trace):
+    spec = TRACES[trace]
+    lens = sample_lengths(trace, 20000, seed=1)
+    assert lens.min() >= spec.min_len and lens.max() <= spec.max_len
+    assert abs(lens.mean() - spec.mean_len) / spec.mean_len < 0.12
+
+
+def test_poisson_arrivals():
+    reqs = make_trace("short", rate=2.0, duration=500, seed=0)
+    n = len(reqs)
+    assert abs(n - 1000) < 150                      # ~rate*duration
+    gaps = np.diff([r.arrival for r in reqs])
+    assert abs(gaps.mean() - 0.5) < 0.08
+
+
+# ----------------------------------------------------------------- simulator
+def test_all_policies_complete():
+    base = make_trace("short", rate=1.0, duration=60, seed=2)
+    for pol in ["tetris", "single_chunk", "loongserve", "loongserve_disagg",
+                "fixed_sp_8", "fixed_sp_16"]:
+        spec = ClusterSpec(n_prefill=32, n_decode=4,
+                           disaggregated=(pol != "loongserve"))
+        sim = Simulator(spec, make_policy(pol, MODEL, spec))
+        out = sim.run(clone(base))
+        s = summarize(out)
+        assert s["n"] == len(base)
+        done = [r for r in out.values() if r.done is not None]
+        assert len(done) == len(base), pol
+        for r in done:
+            assert r.generated == r.output_len
+            assert r.prefill_done >= r.arrival
+            assert all(b >= a for a, b in zip(r.token_times,
+                                              r.token_times[1:]))
+
+
+def test_tetris_beats_fixed16_for_short_trace():
+    base = make_trace("short", rate=1.5, duration=120, seed=3)
+    res = {}
+    for pol in ["tetris", "fixed_sp_16"]:
+        spec = ClusterSpec(n_prefill=32, n_decode=4)
+        sim = Simulator(spec, make_policy(pol, MODEL, spec))
+        res[pol] = summarize(sim.run(clone(base)))
+    assert res["tetris"]["ttft_p50"] <= res["fixed_sp_16"]["ttft_p50"]
+
+
+def test_disaggregation_improves_tbt():
+    """Large-TP decode instances must beat TP=1 ESP decode on median TBT
+    (paper Fig. 2 / Sec. 7.2)."""
+    base = make_trace("short", rate=0.8, duration=120, seed=4)
+    spec_d = ClusterSpec(n_prefill=32, n_decode=4, disaggregated=True)
+    spec_l = ClusterSpec(n_prefill=32, n_decode=4, disaggregated=False)
+    s_d = summarize(Simulator(spec_d, make_policy(
+        "loongserve_disagg", MODEL, spec_d)).run(clone(base)))
+    s_l = summarize(Simulator(spec_l, make_policy(
+        "loongserve", MODEL, spec_l)).run(clone(base)))
+    assert s_d["tbt_p50"] < s_l["tbt_p50"]
+
+
+def test_virtual_usage_prevents_overcommit():
+    """With tiny decode capacity, requests must wait, not overflow."""
+    base = make_trace("short", rate=2.0, duration=30, seed=5)
+    spec = ClusterSpec(n_prefill=16, n_decode=1, cache_slots=150_000)
+    sim = Simulator(spec, make_policy("tetris", MODEL, spec))
+    out = sim.run(clone(base))
+    d = sim.decodes[0]
+    assert d.slots_free >= 0
+    assert all(r.done is not None for r in out.values()
+               if r.prefill_done is not None)
+
+
+# --------------------------------------------------------------- block mgr
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 5000), st.integers(1, 500)),
+                min_size=1, max_size=30))
+def test_block_manager_conservation(ops):
+    bm = BlockManager(total_blocks=200, block_size=128)
+    live = {}
+    for i, (tokens, extra) in enumerate(ops):
+        if bm.reserve_virtual(i, tokens):
+            bm.commit(i)
+            live[i] = tokens
+            bm.extend(i, tokens + extra)
+        if live and i % 3 == 0:
+            rid = next(iter(live))
+            bm.release(rid)
+            del live[rid]
+        used = sum(len(b) for b in bm.allocs.values())
+        assert used + bm.n_free == 200
+    for rid in list(live):
+        bm.release(rid)
+    assert bm.n_free == 200
+
+
+def test_block_manager_freeness():
+    bm = BlockManager(total_blocks=100, block_size=128)
+    f0 = bm.freeness(batch_size=0)
+    bm.reserve_virtual(0, 128 * 50)
+    assert bm.freeness(batch_size=0) < f0
+    assert not bm.can_fit(128 * 51)
+    assert bm.can_fit(128 * 50)
+
+
+# ----------------------------------------------------------- transfer mgr
+def test_transfer_handshake_fifo_ordering():
+    tm = TransferManager(n_backends=1)
+    tm.handshake(1, 2, [1e9, 1e9], now=0.0)
+    tm.handshake(2, 1, [1e9], now=1.0)
+    tm.handshake(3, 1, [1e9], now=0.5)     # earlier handshake than rid 2
+    assert tm.has_backend(1)
+    assert not tm.has_backend(2) and not tm.has_backend(3)
+    tm.complete(1)
+    # backend must go to rid 3 (earliest first-handshake), not rid 2
+    assert tm.has_backend(3)
+    tm.complete(3)
+    assert tm.has_backend(2)
+    tm.complete(2)
+    assert len(tm.free_backends) == 1
+    assert tm.stats["transfers"] == 3
+
+
+def test_transfer_no_starvation():
+    """Every request eventually gets a backend (no starvation)."""
+    tm = TransferManager(n_backends=2)
+    for rid in range(10):
+        tm.handshake(rid, 1, [1e8], now=float(rid))
+    served = []
+    for _ in range(10):
+        active = [r for r in list(tm.states) if tm.has_backend(r)]
+        assert active
+        tm.complete(active[0])
+        served.append(active[0])
+    assert sorted(served) == list(range(10))
+
+
+# ------------------------------------------------------------ rate control
+def test_dynamic_tetris_policy_runs():
+    """End-to-end: online controller + profiled table inside the simulator,
+    competitive with the best fixed rate."""
+    from repro.core.improvement_rate import DynamicRateController
+    from repro.serving.simulator import DynamicTetrisPolicy
+    base = make_trace("medium", rate=2.0, duration=90, seed=11)
+    spec = ClusterSpec(n_prefill=16, n_decode=2)
+    table = {0.5: 0.1, 2.0: 0.3, 4.0: 0.7}
+    pol = DynamicTetrisPolicy(MODEL, spec,
+                              DynamicRateController(table, window=20.0))
+    s_dyn = summarize(Simulator(spec, pol).run(clone(base)))
+    s_fix = summarize(Simulator(spec, make_policy(
+        "tetris", MODEL, spec, rate_fn=lambda now: 0.3)).run(clone(base)))
+    assert s_dyn["n"] == s_fix["n"] == len(base)
+    assert s_dyn["ttft_mean"] < 3.0 * s_fix["ttft_mean"]
+
+
+def test_dynamic_rate_controller():
+    table = {0.5: 0.1, 2.0: 0.3, 4.0: 0.6}
+    ctl = DynamicRateController(table, window=10.0)
+    for t in np.arange(0, 10, 2.0):       # 0.5 req/s
+        ctl.observe(float(t))
+    assert ctl.rate(10.0) == 0.1
+    for t in np.arange(10, 20, 0.25):     # 4 req/s
+        ctl.observe(float(t))
+    assert ctl.rate(20.0) == 0.6

@@ -1,0 +1,57 @@
+"""Training substrate: optimizer, pipeline determinism, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_reduced
+from repro.models.params import init_params
+from repro.training import checkpoint
+from repro.training.data import make_pipeline
+from repro.training.optimizer import AdamW
+from repro.training.train_loop import Trainer
+
+
+def test_loss_decreases():
+    cfg = make_reduced("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    data = make_pipeline(cfg, seq_len=64, batch_size=8)
+    tr = Trainer(cfg, params, opt=AdamW(lr=1e-3, warmup_steps=20))
+    hist = tr.fit(data, steps=40, log_every=10)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_pipeline_deterministic():
+    cfg = make_reduced("yi-9b")
+    d1 = make_pipeline(cfg, 32, 4, seed=7)
+    d2 = make_pipeline(cfg, 32, 4, seed=7)
+    b1, b2 = d1.batch(3), d2.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(3)["tokens"], d1.batch(4)["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_adamw_moves_toward_minimum():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}        # d/dw (w^2)
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = make_reduced("mixtral-8x22b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    checkpoint.save(path, {"params": params}, step=123)
+    restored = checkpoint.restore(path, {"params": params})
+    assert checkpoint.latest_step(path) == 123
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,40 @@
+"""Zigzag/striped layout properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.zigzag import (inverse_permutation, striped_permutation,
+                               workload_imbalance, zigzag_permutation)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 4))
+def test_zigzag_is_permutation(log_n, extra):
+    n = 2 ** log_n
+    S = 2 * n * (2 ** extra)
+    perm = zigzag_permutation(S, n)
+    assert sorted(perm) == list(range(S))
+    inv = inverse_permutation(perm)
+    np.testing.assert_array_equal(perm[inv], np.arange(S))
+
+
+def test_zigzag_balances_causal_work():
+    S, n = 4096, 8
+    naive = workload_imbalance(np.arange(S), n)
+    zig = workload_imbalance(zigzag_permutation(S, n), n)
+    stripe = workload_imbalance(striped_permutation(S, n), n)
+    assert naive > 1.5            # contiguous shards are badly imbalanced
+    assert zig < 1.01             # zigzag is essentially perfect
+    assert stripe < 1.05
+
+
+def test_zigzag_shard_contents():
+    """Shard i holds slices (i, 2N-1-i)."""
+    S, n = 64, 4
+    perm = zigzag_permutation(S, n).reshape(n, S // n)
+    slc = S // (2 * n)
+    for i in range(n):
+        want = set(range(i * slc, (i + 1) * slc)) | \
+            set(range((2 * n - 1 - i) * slc, (2 * n - i) * slc))
+        assert set(perm[i]) == want
