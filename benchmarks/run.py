@@ -18,6 +18,7 @@ MODULES = [
     "fig13_chunking_ablation",
     "fig14_transfer_overhead",
     "table2_scheduler_overhead",
+    "engine_fidelity",
     "roofline_report",
 ]
 

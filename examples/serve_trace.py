@@ -61,6 +61,13 @@ def main() -> None:
           f"TBT p50 {s['tbt_p50']*1e3:.1f}ms | "
           f"throughput {s['throughput_tok_s']:.1f} tok/s (event clock)")
 
+    # chunk-granular fidelity: each chunk executed at its scheduled time
+    execs = [(e, sch[0]) for r in eng.reqs.values()
+             for e, sch in zip(r.chunk_exec, r.chunk_sched)]
+    drift = max((abs(e - s0) for e, s0 in execs), default=0.0)
+    print(f"chunks executed {len(execs)} | "
+          f"max |executed - scheduled| start drift {drift:.2e}s")
+
     # verify one request against direct autoregressive generation
     rid = 0
     toks = list(prompts[rid])

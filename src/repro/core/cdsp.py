@@ -61,6 +61,23 @@ def _history_for_layers(history: Optional[dict]) -> Optional[dict]:
     return history
 
 
+def prefill_chunk(params: dict, cfg: ModelConfig, ctx: ExecContext,
+                  tokens: jax.Array, positions: jax.Array,
+                  history: Optional[dict] = None,
+                  encoder_frames: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, dict]:
+    """Run ONE CDSP chunk against the running history.
+
+    This is the unit the serving engine executes per scheduled chunk event:
+    the chunk attends to ``history`` (previous chunks' re-balanced KV /
+    handed-over SSD state) plus its own causal self-attention.  Returns
+    (next-token logits (B, 1, V), updated history)."""
+    logits, _, new_caches = forward(
+        params, cfg, ctx, tokens, positions, "prefill",
+        history=history, encoder_frames=encoder_frames)
+    return logits, _append_history(cfg, history, new_caches, positions)
+
+
 def chunked_prefill(params: dict, cfg: ModelConfig, ctx: ExecContext,
                     tokens: jax.Array, positions: jax.Array,
                     chunk_lens: List[int],
@@ -82,15 +99,10 @@ def chunked_prefill(params: dict, cfg: ModelConfig, ctx: ExecContext,
     logits = None
     off = 0
     for n, L in enumerate(chunk_lens):
-        tok_c = tokens[:, off:off + L]
-        pos_c = (positions[..., off:off + L])
-        hist_in = history
-        # the pos entry needs a per-block broadcast axis matching scan xs
-        logits, _, new_caches = forward(
-            params, cfg, ctx, tok_c, pos_c, "prefill",
-            history=hist_in,
+        logits, history = prefill_chunk(
+            params, cfg, ctx, tokens[:, off:off + L],
+            positions[..., off:off + L], history,
             encoder_frames=encoder_frames if n == 0 else None)
-        history = _append_history(cfg, history, new_caches, pos_c)
         off += L
     return logits, history
 

@@ -11,8 +11,9 @@ nearest profiled rate (paper: refreshed every 30 s; rates span 0.05-0.75).
 from __future__ import annotations
 
 import bisect
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -52,22 +53,56 @@ def profile_improvement_rates(
 @dataclass
 class DynamicRateController:
     """Online controller: sliding-window arrival-rate estimate -> profiled
-    optimal improvement rate (nearest recorded arrival rate)."""
+    optimal improvement rate (nearest recorded arrival rate).
+
+    The serving engine additionally reports the prefill pool's queue
+    backlog at every chunk boundary (``observe_queue``).  With
+    ``queue_gain > 0`` the profiled rate is scaled up under backlog — a
+    higher improvement-rate threshold suppresses speculative SP expansion
+    exactly when the pool is congested.  ``queue_gain = 0`` (default) keeps
+    the paper-faithful arrival-rate-only behaviour."""
     table: Dict[float, float]
     window: float = 30.0
     default: float = 0.3
-    _arrivals: List[float] = field(default_factory=list)
+    queue_gain: float = 0.0
+    _arrivals: Deque[float] = field(default_factory=deque)
+    _queue_obs: Deque[tuple] = field(default_factory=deque)  # (t, backlog s)
     _keys: Optional[List[float]] = None
 
     def observe(self, t: float) -> None:
         self._arrivals.append(t)
 
+    def observe_queue(self, t: float, backlog: float) -> None:
+        """Record the mean per-instance queue backlog (seconds) seen at a
+        chunk boundary.  Trims here (not only in queue_pressure) so the
+        buffer stays bounded even when queue_gain is 0."""
+        lo = t - self.window
+        while self._queue_obs and self._queue_obs[0][0] < lo:
+            self._queue_obs.popleft()
+        self._queue_obs.append((t, backlog))
+
+    def queue_pressure(self, now: float) -> float:
+        """Mean observed backlog (seconds) over the sliding window."""
+        lo = now - self.window
+        while self._queue_obs and self._queue_obs[0][0] < lo:
+            self._queue_obs.popleft()
+        if not self._queue_obs:
+            return 0.0
+        return sum(b for _, b in self._queue_obs) / len(self._queue_obs)
+
     def rate(self, now: float) -> float:
+        base = self._table_rate(now)
+        if self.queue_gain > 0.0:
+            base = min(0.95, base * (1.0 + self.queue_gain
+                                     * self.queue_pressure(now)))
+        return base
+
+    def _table_rate(self, now: float) -> float:
         if not self.table:
             return self.default
         lo = now - self.window
         while self._arrivals and self._arrivals[0] < lo:
-            self._arrivals.pop(0)
+            self._arrivals.popleft()
         if not self._arrivals:
             return self.default
         ar = len(self._arrivals) / self.window

@@ -12,6 +12,17 @@ than ``length - window``.  Blocks fully outside the valid range are skipped
 via predication, which matters for continuous batching where sequence lengths
 in a decode batch differ wildly.
 
+Paged variants for the serving engine's block-table KV layout
+(PagedAttention-style, pool (n_pages, page, KVH, D) + table (B, pages/seq)):
+
+* ``paged_flash_decode`` — the same streaming kernel with the page table as
+  a scalar-prefetch argument; the KV BlockSpec index map dereferences the
+  table so each grid step DMAs the right physical page (no materialised
+  dense copy).
+* ``gather_kv_pages`` / ``scatter_kv_token`` / ``scatter_kv_prefill`` —
+  jitted XLA gather/scatter between pools and dense per-step views, used by
+  the engine around the full-model decode step.
+
 Validated against kernels/ref.decode_attention_ref in interpret mode.
 """
 
@@ -132,6 +143,172 @@ def flash_decode(
         ],
         interpret=interpret,
     )(lengths, q, k_cache, v_cache)
+    if with_lse:
+        return out, lse
+    return out
+
+
+# ------------------------------------------------------------ paged layout
+@jax.jit
+def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Dense per-batch view of paged KV.
+
+    pool: (nb, n_pages, page, KVH, D); block_table: (B, pages_per_seq)
+    int32 physical page ids -> (nb, B, pages_per_seq * page, KVH, D).
+    """
+    nb = pool.shape[0]
+    B, npg = block_table.shape
+    g = pool[:, block_table]              # (nb, B, npg, page, KVH, D)
+    return g.reshape(nb, B, npg * pool.shape[2], *pool.shape[3:])
+
+
+@jax.jit
+def scatter_kv_token(pool: jax.Array, block_table: jax.Array,
+                     lengths: jax.Array, new: jax.Array) -> jax.Array:
+    """Write one token per sequence at logical position ``lengths[b]``.
+
+    new: (nb, B, KVH, D).  Rows whose table points at a scratch page are
+    harmless no-ops for live data (the engine pads inactive rows that way).
+    """
+    page = pool.shape[2]
+    B = block_table.shape[0]
+    phys = block_table[jnp.arange(B), lengths // page]         # (B,)
+    return pool.at[:, phys, lengths % page].set(
+        new.astype(pool.dtype))
+
+
+@jax.jit
+def take_token(dense: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Extract the token each row just wrote at position ``lengths[b]``
+    from a dense (nb, B, S, KVH, D) cache view -> (nb, B, KVH, D)."""
+    B = dense.shape[1]
+    return dense[:, jnp.arange(B), lengths]
+
+
+@jax.jit
+def scatter_kv_prefill(pool: jax.Array, blocks: jax.Array,
+                       seq_kv: jax.Array) -> jax.Array:
+    """Scatter a whole prefilled sequence into its pages.
+
+    blocks: (pages_per_seq,) physical ids; seq_kv: (nb, S, KVH, D) with
+    S <= pages_per_seq * page, token i lands in page blocks[i // page].
+    """
+    page = pool.shape[2]
+    S = seq_kv.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    return pool.at[:, blocks[pos // page], pos % page].set(
+        seq_kv.astype(pool.dtype))
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         lse_ref, acc_scr, m_scr, l_scr,
+                         *, scale: float, nk: int, bk: int, group: int,
+                         window: Optional[int]):
+    b = pl.program_id(0)
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    length = len_ref[b]
+    # logical position: pages appear in table order, so position is just
+    # the flat index — the physical indirection happened in the index map
+    kv_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+    valid = kv_pos < length
+    if window is not None:
+        valid &= kv_pos >= (length - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale                 # (H, D)
+        k = k_ref[0].astype(jnp.float32)                         # (bk, KVH, D)
+        v = v_ref[0].astype(jnp.float32)
+        KVH = k.shape[1]
+        H, D = q.shape
+        qg = q.reshape(KVH, group, D)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 0, 2), (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1).reshape(H))
+        p = jnp.exp(s - m_new.reshape(KVH, group)[:, :, None])
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1).reshape(H)
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, D)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = jnp.where(l > 0.0, m_scr[...] + jnp.log(safe_l),
+                               NEG_INF).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softmax_scale", "interpret", "with_lse"))
+def paged_flash_decode(
+    q: jax.Array,                      # (B, H, D)
+    k_pool: jax.Array,                 # (n_pages, page, KVH, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,           # (B, pages_per_seq) int32
+    lengths: jax.Array,                # (B,) int32
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    interpret: bool = False,
+    with_lse: bool = False,
+) -> jax.Array | Tuple[jax.Array, jax.Array]:
+    """Flash decode straight off the paged pool: the block table is a
+    scalar-prefetch argument and the KV BlockSpec index map dereferences it,
+    so each (b, ik) grid step DMAs physical page ``block_tables[b, ik]``."""
+    B, H, D = q.shape
+    _, bk, KVH, _ = k_pool.shape
+    nk = block_tables.shape[1]
+    group = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, nk=nk,
+                               bk=bk, group=group, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,         # block_tables, lengths
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bk, KVH, D),
+                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+            pl.BlockSpec((1, bk, KVH, D),
+                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, ik, bt, ln: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pool, v_pool)
     if with_lse:
         return out, lse
     return out

@@ -50,6 +50,7 @@ def main() -> None:
     for rid, toks in sorted(outs.items()):
         r = eng.reqs[rid]
         print(f"req {rid}: len={r.prompt_len} plan={r.chunk_plan} "
+              f"chunks@{[f'{t:.3f}' for t in r.chunk_exec]} "
               f"ttft={r.ttft:.3f}s tokens={toks[:8]}...")
     s = summarize(eng.reqs)
     print(f"\nTTFT p50 {s['ttft_p50']:.3f}s p99 {s['ttft_p99']:.3f}s | "

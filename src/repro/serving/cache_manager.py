@@ -1,9 +1,18 @@
-"""Paged KV-cache block manager (PagedAttention-style accounting).
+"""Paged KV cache: block-table accounting + physical paged storage.
 
-Tracks physical cache blocks per decode instance plus Llumnix-style
-"virtual usage": slots reserved for requests whose KV is still in flight
-from the prefill pool (Sec. 5.2).  The freeness rate used by the decode
-router is (free - virtual) / active_batch.
+``BlockManager`` tracks physical cache blocks per decode instance plus
+Llumnix-style "virtual usage": slots reserved for requests whose KV is
+still in flight from the prefill pool (Sec. 5.2).  The freeness rate used
+by the decode router is (free - virtual) / active_batch.
+
+``PagedKVCache`` is the physical side: per attention layer a block pool of
+shape (n_blocks, total_blocks, block_size, KVH, D) indexed through the
+BlockManager's per-request block lists (Infinite-LLM-style distributed
+paged layout, one pool per decode instance).  Decode gathers the active
+batch's pages into a dense view and scatters each new token's K/V back
+into its page (kernels/flash_decode.gather_kv_pages / scatter_kv_token).
+Block id ``total_blocks`` is a scratch page: padded batch rows write there
+so inactive rows can never corrupt live pages.
 """
 
 from __future__ import annotations
@@ -71,3 +80,62 @@ class BlockManager:
     def release(self, rid: int) -> None:
         self.free_blocks += self.allocs.pop(rid, [])
         self.virtual_tokens.pop(rid, None)
+
+
+class PagedKVCache:
+    """Physical paged KV pools for the attention layers of one instance.
+
+    Non-attention per-request state (SSD state, conv windows, cross-attn
+    KV) is O(1) or fixed-size in the sequence dimension and is kept as
+    small per-request trees by the engine; only attention KV is paged.
+    """
+
+    def __init__(self, cfg, total_blocks: int, block_size: int,
+                 dtype: Optional[str] = None):
+        import jax.numpy as jnp
+        self.cfg = cfg
+        self.total_blocks = total_blocks
+        self.block_size = block_size
+        self.scratch_block = total_blocks       # extra page for padded rows
+        self.attn_layers = [i for i, s in enumerate(cfg.pattern)
+                            if s.mixer == "attn"]
+        dt = jnp.dtype(dtype or cfg.dtype)
+        nb, kvh, dh = cfg.n_blocks, cfg.n_kv_heads, cfg.head_dim_
+        shape = (nb, total_blocks + 1, block_size, kvh, dh)
+        self.pools = {str(i): {"k": jnp.zeros(shape, dt),
+                               "v": jnp.zeros(shape, dt)}
+                      for i in self.attn_layers}
+
+    # ------------------------------------------------------------- prefill
+    def write_prefill(self, blocks: List[int], caches: dict,
+                      n_tokens: int) -> None:
+        """Scatter a request's prefilled KV (natural order, from
+        ``history_to_decode_caches``) into its physical pages."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import scatter_kv_prefill
+        assert len(blocks) * self.block_size >= n_tokens, (blocks, n_tokens)
+        blk = jnp.asarray(blocks, jnp.int32)
+        for i in self.attn_layers:
+            ent = caches[str(i)]["self"]
+            k = ent["k"][:, 0, :n_tokens]       # (nb, S, KVH, D)
+            v = ent["v"][:, 0, :n_tokens]
+            self.pools[str(i)]["k"] = scatter_kv_prefill(
+                self.pools[str(i)]["k"], blk, k)
+            self.pools[str(i)]["v"] = scatter_kv_prefill(
+                self.pools[str(i)]["v"], blk, v)
+
+    # -------------------------------------------------------------- decode
+    def gather(self, layer: int, block_table) -> dict:
+        from repro.kernels.flash_decode import gather_kv_pages
+        p = self.pools[str(layer)]
+        return {"k": gather_kv_pages(p["k"], block_table),
+                "v": gather_kv_pages(p["v"], block_table)}
+
+    def append_token(self, layer: int, block_table, lengths,
+                     k_new, v_new) -> None:
+        """Write one new token's K/V per batch row (padded rows must point
+        their table at the scratch page)."""
+        from repro.kernels.flash_decode import scatter_kv_token
+        p = self.pools[str(layer)]
+        p["k"] = scatter_kv_token(p["k"], block_table, lengths, k_new)
+        p["v"] = scatter_kv_token(p["v"], block_table, lengths, v_new)

@@ -1,62 +1,100 @@
 """Tetris serving engine — real JAX execution driven by the event loop.
 
-Extends the discrete-event Simulator: scheduling, queueing, transfer and
-batching decisions follow the same (virtual) clock, but prefill chunks and
-decode iterations execute REAL model compute — CDSP chunked prefill
-(core/cdsp.py), KV hand-off (history -> natural-order decode caches, the
-P->D transfer), paged block accounting, handshake-managed transfer backends
-and continuous-batch decode with greedy sampling.
+Extends the discrete-event Simulator with *chunk-granular* real execution:
+every CDSP prefill chunk is its own event and runs at the time the
+scheduler's plan says it runs (per-chunk SP sizes, queueing and mid-prefill
+preemption/requeue all happen at chunk boundaries, like the paper's
+fine-grained SP), KV hands off to decode instances through per-chunk
+handshake transfers, and decode reads/writes KV through BlockManager block
+tables over a paged physical pool (serving/cache_manager.PagedKVCache +
+kernels/flash_decode gather/scatter) instead of dense (max_batch, max_seq)
+slot buffers.
 
-On CPU this serves reduced models end-to-end (examples/serve_trace.py and
-tests/test_engine.py verify generated tokens match direct autoregressive
-generation); on TPU the same engine executes on sharded meshes via the
-ExecContext.
+A DynamicRateController can be wired directly into the engine: arrivals and
+chunk-boundary queue backlog feed its sliding windows, and the policy's
+improvement rate — the gate on SP expansion — comes from the controller's
+observed load rather than a fixed constant.
+
+Per-chunk timing is exposed in ``chunk_log`` / ``Request.chunk_sched`` /
+``Request.chunk_exec`` so benchmarks can compare executed against simulated
+TTFT/TBT.  On CPU this serves reduced models end-to-end (tests/test_engine,
+tests/test_paged_engine); on TPU the same engine executes on sharded meshes
+via the ExecContext.
 """
 
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cdsp import chunked_prefill, history_to_decode_caches
-from repro.core.latency_model import DecodeLatencyModel, PrefillLatencyModel
+from repro.core.cdsp import history_to_decode_caches, prefill_chunk
+from repro.core.improvement_rate import DynamicRateController
+from repro.core.latency_model import DecodeLatencyModel
 from repro.models.config import ModelConfig
 from repro.models.sharding import CPU_CTX, ExecContext
 from repro.models.transformer import forward
-from repro.serving.cache_manager import BlockManager
+from repro.serving.cache_manager import BlockManager, PagedKVCache
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import ClusterSpec, Policy, Simulator
 from repro.serving.transfer import TransferManager
 
 
 @dataclass
-class _Slot:
-    rid: int
+class _PrefillState:
+    """Running state of a chunk-granular prefill."""
+    off: int = 0                        # tokens prefilled so far
+    history: Optional[dict] = None      # CDSP history (re-balanced KV)
+    logits: Optional[jax.Array] = None  # last chunk's next-token logits
+
+
+@dataclass
+class _DecodeMeta:
+    row: int                            # batch row (stable while resident)
     cache_len: int
     last_token: int
-    max_total: int
+    blocks: List[int] = field(default_factory=list)
 
 
-class DecodeState:
-    """Fixed-capacity batched cache buffers for one decode instance."""
+class PagedDecodeState:
+    """Block-table KV decode state for one decode instance.
+
+    Attention KV lives in a PagedKVCache pool addressed through the
+    BlockManager's per-request block lists; each decode tick gathers the
+    active batch's pages into a dense view sized to the *current* longest
+    allocation (not max_seq), runs the model step, and scatters the new
+    token's K/V back into its page.  Non-attention per-request state (SSD
+    state, conv window, cross KV) is O(1) in sequence length and kept as
+    small per-request trees, stacked per tick.
+    """
 
     def __init__(self, cfg: ModelConfig, max_batch: int, max_seq: int,
-                 block_size: int = 256):
-        from repro.configs.registry import cache_specs
+                 block_size: int = 64, n_backends: int = 8,
+                 bandwidth: float = 40e9):
+        assert max_seq % block_size == 0, (max_seq, block_size)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
-        specs = cache_specs(cfg, max_batch, max_seq, dtype=cfg.dtype)
-        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
-        self.slots: List[Optional[_Slot]] = [None] * max_batch
-        self.blocks = BlockManager(total_blocks=max_batch * max_seq
-                                   // block_size, block_size=block_size)
-        self.transfers = TransferManager(n_backends=4)
+        self.block_size = block_size
+        total_blocks = max_batch * max_seq // block_size
+        self.blocks = BlockManager(total_blocks=total_blocks,
+                                   block_size=block_size)
+        self.kv = PagedKVCache(cfg, total_blocks, block_size,
+                               dtype=cfg.dtype)
+        self.slots: List[Optional[int]] = [None] * max_batch   # row -> rid
+        self.meta: Dict[int, _DecodeMeta] = {}
+        self.aux: Dict[int, dict] = {}     # rid -> non-attn cache tree (B=1)
+        self.transfers = TransferManager(n_backends=n_backends,
+                                         bandwidth=bandwidth)
+        # memo of the last tick's dense view: (batch signature, cache tree).
+        # While batch membership is stable the model step's own output IS
+        # the next dense view; the pool stays authoritative via scatter and
+        # is re-gathered whenever membership (and hence layout) changes.
+        self._dense: Optional[tuple] = None
 
     def free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -69,42 +107,124 @@ class DecodeState:
         return sum(s is not None for s in self.slots)
 
     # ------------------------------------------------------------- insert
-    def insert(self, slot: int, req_caches: dict, cache_len: int,
-               rid: int, last_token: int, max_total: int) -> None:
-        def walk(buf, new, key=None):
-            if isinstance(buf, dict):
-                return {k: walk(buf[k], new[k], k) for k in buf}
-            if key in ("k", "v") and new.shape[2] <= buf.shape[2]:
-                # (nb, 1, S, KVH, D) -> write first S rows of the slot
-                return jax.lax.dynamic_update_slice(
-                    buf, new.astype(buf.dtype), (0, slot, 0, 0, 0))
-            return jax.lax.dynamic_update_slice(
-                buf, new.astype(buf.dtype), (0, slot) + (0,) * (buf.ndim - 2))
-        self.caches = walk(self.caches, req_caches)
-        self.slots[slot] = _Slot(rid, cache_len, last_token, max_total)
+    def insert(self, row: int, rid: int, caches: dict, cache_len: int,
+               last_token: int) -> None:
+        """Admit a request: commit its virtual block reservation, scatter
+        its prefilled attention KV into the pages, keep aux state."""
+        blocks = self.blocks.commit(rid)
+        self.slots[row] = rid
+        self.meta[rid] = _DecodeMeta(row, cache_len, last_token, blocks)
+        self.kv.write_prefill(blocks, caches, cache_len)
+        aux = {}
+        for i, spec in enumerate(self.cfg.pattern):
+            ent = {}
+            if spec.mixer != "attn":
+                ent["self"] = caches[str(i)]["self"]
+            if "cross" in caches[str(i)]:
+                ent["cross"] = caches[str(i)]["cross"]
+            if ent:
+                aux[str(i)] = ent
+        self.aux[rid] = aux
 
-    def evict(self, slot: int) -> None:
-        self.slots[slot] = None
+    def evict(self, rid: int) -> None:
+        m = self.meta.pop(rid)
+        self.slots[m.row] = None
+        self.aux.pop(rid, None)
+        self.blocks.release(rid)
+
+    # -------------------------------------------------------------- batch
+    def block_table(self, active: List[int]):
+        """(max_batch, max_blocks) physical page table; inactive rows point
+        at the scratch page so their writes can never corrupt live data."""
+        maxb = max(len(self.meta[r].blocks) for r in active)
+        bt = np.full((self.max_batch, maxb), self.kv.scratch_block, np.int32)
+        for r in active:
+            m = self.meta[r]
+            bt[m.row, :len(m.blocks)] = m.blocks
+        return jnp.asarray(bt)
+
+    def build_caches(self, active: List[int], bt) -> dict:
+        """Assemble the dense cache tree for one decode step: paged gather
+        for attention layers, per-request aux rows stacked for the rest."""
+        caches = {}
+        for i, spec in enumerate(self.cfg.pattern):
+            key = str(i)
+            ent = {}
+            if spec.mixer == "attn":
+                ent["self"] = self.kv.gather(i, bt)
+            else:
+                ent["self"] = self._stack_rows(active, key, "self")
+            if any("cross" in self.aux[r].get(key, {}) for r in active):
+                ent["cross"] = self._stack_rows(active, key, "cross")
+            caches[key] = ent
+        return caches
+
+    def _stack_rows(self, active: List[int], key: str, part: str):
+        by_row = {self.meta[r].row: self.aux[r][key][part] for r in active}
+        template = jax.tree.map(jnp.zeros_like, next(iter(by_row.values())))
+        rows = [by_row.get(i, template) for i in range(self.max_batch)]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *rows)
+
+    def absorb(self, new_caches: dict, active: List[int], bt, clen) -> None:
+        """Fold one decode step's outputs back: scatter each new token's
+        K/V into its page, re-slice updated aux state per request."""
+        from repro.kernels.flash_decode import take_token
+        for i in self.kv.attn_layers:
+            ent = new_caches[str(i)]["self"]
+            self.kv.append_token(i, bt, clen,
+                                 take_token(ent["k"], clen),
+                                 take_token(ent["v"], clen))
+        for r in active:
+            row = self.meta[r].row
+            for key, ent in self.aux[r].items():
+                if "self" in ent:
+                    ent["self"] = jax.tree.map(
+                        lambda a: a[:, row:row + 1],
+                        new_caches[key]["self"])
 
 
 class ServingEngine(Simulator):
     def __init__(self, cfg: ModelConfig, params: dict, spec: ClusterSpec,
                  policy: Policy, *, ctx: ExecContext = CPU_CTX,
                  max_batch: int = 8, max_seq: int = 512,
-                 decode_model: Optional[DecodeLatencyModel] = None):
+                 block_size: int = 64,
+                 decode_model: Optional[DecodeLatencyModel] = None,
+                 rate_controller: Optional[DynamicRateController] = None):
         super().__init__(spec, policy, decode_model)
+        assert spec.disaggregated, "real engine decode is disaggregated"
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
-        self.histories: Dict[int, dict] = {}
-        self.dstates = [DecodeState(cfg, max_batch, max_seq)
+        self.chunk_log: Dict[int, List[dict]] = {}
+        self.dstates = [PagedDecodeState(cfg, max_batch, max_seq, block_size,
+                                         n_backends=spec.backends_per_decode,
+                                         bandwidth=spec.transfer_bw)
                         for _ in range(spec.n_decode)]
-        self._rid_slot: Dict[int, tuple] = {}
+        self._prefill: Dict[int, _PrefillState] = {}
+        self._preempt_flags: set = set()
+        self.controller = rate_controller
+        if rate_controller is not None:
+            own = getattr(policy, "controller", None)
+            if own is not None and own is not rate_controller:
+                raise ValueError(
+                    "policy already owns a different DynamicRateController; "
+                    "pass rate_controller=policy.controller or drop one")
+            # SP expansion regulated by the controller's observed load
+            # instead of the policy's static rate_fn
+            policy.rate_fn = rate_controller.rate
 
     # ---------------------------------------------------------------- api
     def submit(self, req: Request, prompt_tokens: np.ndarray) -> None:
+        d = self.dstates[0]
+        cap = d.blocks.total_blocks * d.block_size
+        if req.prompt_len + req.output_len > cap:
+            # would otherwise spin forever in the transfer_done retry loop
+            raise ValueError(
+                f"request {req.rid} needs {req.prompt_len + req.output_len} "
+                f"cache tokens > decode pool capacity {cap} "
+                f"(max_batch * max_seq)")
         self.prompts[req.rid] = np.asarray(prompt_tokens)
         self.reqs[req.rid] = req
         self._push(req.arrival, "arrive", req.rid)
@@ -115,79 +235,174 @@ class ServingEngine(Simulator):
             getattr(self, f"_on_{kind}")(t, payload)
         return self.outputs
 
-    # ------------------------------------------------------- real prefill
-    def _on_arrive(self, now: float, rid: int) -> None:
-        super()._on_arrive(now, rid)
-        req = self.reqs[rid]
-        if req.chunk_plan is None:
+    def preempt(self, rid: int, at: Optional[float] = None) -> None:
+        """Flag ``rid`` for mid-prefill preemption: at the next chunk
+        boundary its remaining chunks are cancelled and the remainder of
+        the prompt is re-planned (requeued) under the then-current load.
+        With ``at`` the flag is set by an event at that virtual time;
+        without it the flag applies immediately (e.g. before serve())."""
+        if at is not None:
+            self._push(at, "preempt", rid)
             return
-        toks = jnp.asarray(self.prompts[rid])[None, :]           # (1, S)
-        S = toks.shape[1]
+        req = self.reqs.get(rid)
+        if req is not None and req.phase in (Phase.QUEUED, Phase.PREFILL):
+            self._preempt_flags.add(rid)
+
+    # ------------------------------------------------- chunk-granular prefill
+    def _on_arrive(self, now: float, rid: int) -> None:
+        # engine-level controller observes arrivals unless the policy owns
+        # the same controller (DynamicTetrisPolicy observes via on_arrival)
+        if (self.controller is not None
+                and getattr(self.policy, "controller", None)
+                is not self.controller):
+            self.controller.observe(now)
+        super()._on_arrive(now, rid)
+        if self.reqs[rid].chunk_plan is not None:
+            self._prefill[rid] = _PrefillState()
+
+    def _positions(self, off: int, L: int) -> jax.Array:
+        pos = jnp.arange(off, off + L, dtype=jnp.int32)
         if self.cfg.rope_type == "mrope":
-            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, None],
-                                   (3, 1, S))
-        else:
-            pos = jnp.arange(S, dtype=jnp.int32)[None]
-        chunk_lens = [c for c, _ in req.chunk_plan]
-        logits, history = chunked_prefill(self.params, self.cfg, self.ctx,
-                                          toks, pos, chunk_lens)
-        first = int(jnp.argmax(logits[0, 0, :self.cfg.vocab_size]))
-        self.outputs[rid] = [first]
-        self.histories[rid] = history
+            return jnp.broadcast_to(pos[None, None], (3, 1, L))
+        return pos[None]
+
+    def _on_chunk_start(self, now: float, payload) -> None:
+        rid, ci, gen = payload
+        if gen != self.plan_gen.get(rid):
+            return                          # superseded by a requeue
+        if rid in self._preempt_flags:
+            # preempted at the chunk boundary: this chunk and everything
+            # after it are cancelled and re-planned under current load
+            self._preempt_flags.discard(rid)
+            self._requeue(now, rid)
+            return
+        super()._on_chunk_start(now, payload)
+        req, st = self.reqs[rid], self._prefill[rid]
+        L, sp = req.chunk_plan[ci]
+        toks = jnp.asarray(self.prompts[rid][None, st.off:st.off + L])
+        st.logits, st.history = prefill_chunk(
+            self.params, self.cfg, self.ctx, toks,
+            self._positions(st.off, L), st.history)
+        st.off += L
+        self.chunk_log.setdefault(rid, []).append({
+            "chunk": ci, "len": L, "sp": sp,
+            "sched_start": req.chunk_sched[ci][0],
+            "sched_end": req.chunk_sched[ci][1], "exec_start": now})
+        if self.controller is not None:
+            pool = self._pool_view(now)
+            self.controller.observe_queue(
+                now, sum(pool.values()) / max(len(pool), 1))
+        if st.off >= req.prompt_len:
+            self._preempt_flags.discard(rid)   # nothing left to preempt
+            self.outputs[rid] = [int(jnp.argmax(
+                st.logits[0, 0, :self.cfg.vocab_size]))]
+
+    def _on_preempt(self, now: float, rid: int) -> None:
+        req = self.reqs.get(rid)
+        if (req is not None and req.phase == Phase.PREFILL
+                and rid in self._prefill
+                and self._prefill[rid].off < req.prompt_len):
+            self._preempt_flags.add(rid)
+
+    def _on_requeue(self, now: float, rid: int) -> None:
+        self._requeue(now, rid, first=False)
+
+    def _requeue(self, now: float, rid: int, first: bool = True) -> None:
+        """Re-plan the unprefilled remainder of ``rid`` under current load
+        (executed chunks and their history are kept)."""
+        req, st = self.reqs[rid], self._prefill[rid]
+        if first:
+            req.preemptions += 1
+            # cancel the old plan NOW — before attempting the re-plan — so
+            # its un-executed chunk/prefill events can never fire while we
+            # wait for the pool, and its reservations stop inflating queues
+            self.plan_gen[rid] = self.plan_gen.get(rid, 0) + 1
+            executed = len(req.chunk_exec)
+            req.chunk_plan = req.chunk_plan[:executed]
+            req.chunk_sched = req.chunk_sched[:executed]
+            self._cancel_bookings(now, rid, executed)
+        remaining = req.prompt_len - st.off
+        shadow = Request(rid=rid, arrival=now, prompt_len=remaining,
+                         output_len=req.output_len)
+        alloc = self.policy.plan(shadow, self._pool_view(now), now)
+        if alloc is None:
+            self._push(now + 0.05, "requeue", rid)   # queue until it fits
+            return
+        self._commit_plan(now, req, alloc)
 
     # ------------------------------------------------- transfer + routing
+    def _start_transfer(self, now, d, req) -> None:
+        """Per-chunk handshake transfer: each chunk is announced and lands
+        as its own event; decode starts once every chunk has arrived."""
+        dst = self.dstates[req.decode_instance]
+        chunk_bytes = [c * self.spec.kv_bytes_per_token
+                       for c, _ in req.chunk_plan]
+        dst.transfers.handshake(req.rid, len(chunk_bytes), chunk_bytes, now)
+        t = now
+        for k, b in enumerate(chunk_bytes):
+            t += b / self.spec.transfer_bw
+            self._push(t, "chunk_landed", (req.rid, k))
+
+    def _on_chunk_landed(self, now: float, payload) -> None:
+        rid, _k = payload
+        d = self.dstates[self.reqs[rid].decode_instance]
+        if d.transfers.chunk_landed(rid):
+            self._on_transfer_done(now, rid)
+
     def _on_transfer_done(self, now: float, rid: int) -> None:
         req = self.reqs[rid]
         d = self.dstates[req.decode_instance]
-        # handshake bookkeeping (engine-level mirror of the simulator path)
-        chunk_bytes = [c * self.spec.kv_bytes_per_token
-                       for c, _ in req.chunk_plan]
-        d.transfers.handshake(rid, len(chunk_bytes), chunk_bytes, now)
-        d.transfers.complete(rid)
-        slot = d.free_slot()
-        if slot is None:
+        need = req.prompt_len + req.output_len
+        row = d.free_slot()
+        if row is None or not d.blocks.reserve_virtual(rid, need):
+            # decode instance saturated: hold the backend, retry shortly
+            # (a failed reserve leaves no virtual entry behind)
             self._push(now + 0.05, "transfer_done", rid)
             return
-        caches, _ = history_to_decode_caches(self.cfg, self.histories.pop(rid),
-                                             max_seq=d.max_seq)
-        d.blocks.reserve_virtual(rid, req.prompt_len + req.output_len)
-        d.blocks.commit(rid)
-        d.insert(slot, caches, req.prompt_len, rid, self.outputs[rid][-1],
-                 req.prompt_len + req.output_len)
-        self._rid_slot[rid] = (req.decode_instance, slot)
+        d.transfers.complete(rid)
+        st = self._prefill.pop(rid)
+        caches, _ = history_to_decode_caches(self.cfg, st.history,
+                                             max_seq=req.prompt_len)
+        d.insert(row, rid, caches, req.prompt_len, self.outputs[rid][-1])
         super()._on_transfer_done(now, rid)
 
     # --------------------------------------------------------- real decode
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
-        active = [(i, s) for i, s in enumerate(d.slots) if s is not None]
+        active = [r for r in d.slots if r is not None]
         if active:
             B = d.max_batch
             toks = np.zeros((B, 1), np.int32)
             clen = np.zeros((B,), np.int32)
-            for i, s in active:
-                toks[i, 0] = s.last_token
-                clen[i] = s.cache_len
+            for r in active:
+                m = d.meta[r]
+                toks[m.row, 0] = m.last_token
+                clen[m.row] = m.cache_len
             toks, clen = jnp.asarray(toks), jnp.asarray(clen)
             pos = (jnp.broadcast_to(clen[None, :, None], (3, B, 1))
                    if self.cfg.rope_type == "mrope" else clen[:, None])
+            bt = d.block_table(active)
+            sig = (tuple(d.slots), int(bt.shape[1]))
+            if d._dense is not None and d._dense[0] == sig:
+                caches = d._dense[1]       # batch unchanged since last tick
+            else:
+                caches = d.build_caches(active, bt)
             logits, _, new_caches = forward(
                 self.params, self.cfg, self.ctx, toks, pos, "decode",
-                caches=d.caches, cache_len=clen)
-            d.caches = new_caches
+                caches=caches, cache_len=clen)
+            d.absorb(new_caches, active, bt, clen)
+            d._dense = (sig, new_caches)
             nxt = np.asarray(jnp.argmax(
                 logits[:, 0, :self.cfg.vocab_size], axis=-1))
-            for i, s in active:
-                s.last_token = int(nxt[i])
-                s.cache_len += 1
-                self.outputs[s.rid].append(int(nxt[i]))
-                d.blocks.extend(s.rid, s.cache_len)
+            for r in active:
+                m = d.meta[r]
+                m.last_token = int(nxt[m.row])
+                m.cache_len += 1
+                self.outputs[r].append(int(nxt[m.row]))
         # virtual-time bookkeeping + token accounting via the parent
         inst = self.decodes[did]
         finished_before = {r.rid for r in inst.batch
                            if r.generated + 1 >= r.output_len}
         super()._on_decode_tick(now, did)
         for rid in finished_before:
-            di, slot = self._rid_slot.pop(rid)
-            self.dstates[di].evict(slot)
-            self.dstates[di].blocks.release(rid)
+            d.evict(rid)

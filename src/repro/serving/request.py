@@ -33,6 +33,11 @@ class Request:
     generated: int = 0
     chunk_plan: Optional[list] = None      # [(length, sp)] actually used
     instances: tuple = ()                  # prefill instances used
+    # chunk-granular execution: scheduled (start, end) per chunk, absolute
+    # event-clock times, and the time each chunk actually executed
+    chunk_sched: List[tuple] = field(default_factory=list)
+    chunk_exec: List[float] = field(default_factory=list)
+    preemptions: int = 0                   # mid-prefill preempt/requeue count
 
     @property
     def ttft(self) -> Optional[float]:

@@ -64,6 +64,10 @@ class Policy:
              ) -> Optional[Allocation]:
         raise NotImplementedError
 
+    def on_arrival(self, now: float) -> None:
+        """Called once per request ARRIVAL (not per plan attempt — requeue
+        re-plans must not pollute arrival-rate estimates)."""
+
 
 class TetrisPolicy(Policy):
     name = "tetris"
@@ -83,8 +87,10 @@ class DynamicTetrisPolicy(Policy):
         super().__init__(model, spec)
         self.controller = controller
 
-    def plan(self, req, pool, now):
+    def on_arrival(self, now):
         self.controller.observe(now)
+
+    def plan(self, req, pool, now):
         return self.sched.schedule(req.prompt_len, pool,
                                    improvement_rate=self.controller.rate(now))
 
@@ -183,6 +189,16 @@ class Simulator:
         self.counter = itertools.count()
         self.reqs: Dict[int, Request] = {}
         self.rejected: List[int] = []
+        # plan generation per request: chunk/prefill events carry the
+        # generation they were scheduled under, so a preempt+requeue can
+        # invalidate in-flight events without removing them from the heap
+        self.plan_gen: Dict[int, int] = {}
+        # booking ledger mirroring free_at: per instance, each request's
+        # busy-until time; per request, its plan's (instances, end) chunks
+        # in order.  Lets a requeue release the cancelled chunks' instance
+        # reservations instead of leaving phantom work in free_at.
+        self._inst_book: Dict[int, Dict[int, float]] = {}
+        self._live_chunks: Dict[int, List[Tuple[Tuple[int, ...], float]]] = {}
 
     # ------------------------------------------------------------- events
     def _push(self, t: float, kind: str, payload) -> None:
@@ -206,20 +222,80 @@ class Simulator:
 
     def _on_arrive(self, now: float, rid: int) -> None:
         req = self.reqs[rid]
+        self.policy.on_arrival(now)
         alloc = self.policy.plan(req, self._pool_view(now), now)
         if alloc is None:
             self.rejected.append(rid)
             return
-        req.phase = Phase.PREFILL
-        req.chunk_plan = [(c.length, c.sp) for c in alloc.chunks]
-        req.instances = alloc.instances
-        for c in alloc.chunks:
-            for i in c.instances:
-                self.free_at[i] = max(self.free_at[i], now + c.t_end)
-        req.prefill_done = now + alloc.ttft
-        self._push(req.prefill_done, "prefill_done", rid)
+        self._commit_plan(now, req, alloc)
 
-    def _on_prefill_done(self, now: float, rid: int) -> None:
+    def _commit_plan(self, now: float, req: Request, alloc) -> None:
+        """Commit an allocation: occupy instance queues and schedule each
+        chunk as its own event at the time the CDSP plan says it runs.
+
+        Called both on arrival and (in the engine) when the remainder of a
+        preempted prefill is re-planned; chunks append to the request's
+        running plan and a new plan generation invalidates stale events."""
+        gen = self.plan_gen[req.rid] = self.plan_gen.get(req.rid, 0) + 1
+        req.phase = Phase.PREFILL
+        req.chunk_plan = (req.chunk_plan or []) + [(c.length, c.sp)
+                                                   for c in alloc.chunks]
+        req.chunk_sched += [(now + c.t_start, now + c.t_end)
+                            for c in alloc.chunks]
+        req.instances = tuple(dict.fromkeys(
+            req.instances + alloc.instances))
+        for c in alloc.chunks:
+            end = now + c.t_end
+            self._live_chunks.setdefault(req.rid, []).append(
+                (tuple(c.instances), end))
+            for i in c.instances:
+                self.free_at[i] = max(self.free_at[i], end)
+                b = self._inst_book.setdefault(i, {})
+                b[req.rid] = max(b.get(req.rid, 0.0), end)
+        base = len(req.chunk_sched) - len(alloc.chunks)
+        for k, c in enumerate(alloc.chunks):
+            self._push(now + c.t_start, "chunk_start", (req.rid, base + k,
+                                                        gen))
+        req.prefill_done = now + alloc.ttft
+        self._push(req.prefill_done, "prefill_done", (req.rid, gen))
+
+    def _on_chunk_start(self, now: float, payload) -> None:
+        rid, ci, gen = payload
+        if gen != self.plan_gen.get(rid):
+            return                          # superseded by a requeue
+        self.reqs[rid].chunk_exec.append(now)
+
+    def _release_bookings(self, rid: int) -> None:
+        """Drop a finished plan's ledger entries (free_at keeps its value;
+        the ledger only exists so cancellations can recompute it)."""
+        for insts, _ in self._live_chunks.pop(rid, []):
+            for i in insts:
+                b = self._inst_book.get(i)
+                if b:
+                    b.pop(rid, None)
+
+    def _cancel_bookings(self, now: float, rid: int, executed: int) -> None:
+        """Release the reservations of ``rid``'s chunks after the first
+        ``executed`` ones and recompute the touched instances' free_at from
+        the remaining ledger, so cancelled work stops inflating queues."""
+        live = self._live_chunks.get(rid, [])
+        cancelled = live[executed:]
+        del live[executed:]
+        touched = {i for insts, _ in cancelled for i in insts}
+        for i in touched:
+            b = self._inst_book.get(i, {})
+            ends = [e for insts, e in live if i in insts]
+            if ends:
+                b[rid] = max(ends)
+            else:
+                b.pop(rid, None)
+            self.free_at[i] = max(b.values(), default=0.0)
+
+    def _on_prefill_done(self, now: float, payload) -> None:
+        rid, gen = payload
+        if gen != self.plan_gen.get(rid):
+            return                          # superseded by a requeue
+        self._release_bookings(rid)
         req = self.reqs[rid]
         if not self.spec.disaggregated:
             # LoongServe static batching: decode occupies the SP group
@@ -248,7 +324,7 @@ class Simulator:
         cand = [d for d in self.decodes if d.slots_free - d.virtual >= need]
         if not cand:
             # wait for slots: retry shortly (memory pressure)
-            self._push(now + 0.05, "prefill_done", rid)
+            self._push(now + 0.05, "prefill_done", (rid, gen))
             return
         d = max(cand, key=DecodeInstance.freeness)
         d.virtual += need

@@ -61,6 +61,15 @@ class TransferManager:
         st = self.states[rid]
         return sum(b for _, b in st.pending_chunks) / self.bandwidth
 
+    def chunk_landed(self, rid: int) -> bool:
+        """One of ``rid``'s chunks finished its wire transfer; returns True
+        when the whole cache has landed (decode may start)."""
+        st = self.states[rid]
+        if st.pending_chunks:
+            st.pending_chunks.pop(0)
+        st.chunks_left -= 1
+        return st.chunks_left <= 0
+
     def complete(self, rid: int) -> None:
         """All chunks of ``rid`` have landed; recycle its backend in
         first-handshake order."""

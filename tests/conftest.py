@@ -11,6 +11,16 @@ import jax
 import numpy as np
 import pytest
 
+# Persistent XLA compilation cache: the suite is dominated by compiles of
+# many distinct (arch, shape) forwards, which are identical run-to-run.
+# Warm runs cut wall time several-fold; set JAX_TEST_CACHE="" to disable.
+_CACHE_DIR = os.environ.get(
+    "JAX_TEST_CACHE",
+    os.path.join(os.path.dirname(__file__), "..", ".jax_cache"))
+if _CACHE_DIR:
+    jax.config.update("jax_compilation_cache_dir", _CACHE_DIR)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+
 
 @pytest.fixture(scope="session")
 def rng():
@@ -34,6 +44,21 @@ def reduced_params_cache():
             cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
         return cache[name]
     return get
+
+
+def generate_dense(params, cfg, prompt, n):
+    """Dense autoregressive reference: greedy-decode ``n`` tokens by
+    re-running full 'train' forwards (the oracle engine tests compare to)."""
+    import jax.numpy as jnp
+    from repro.models.sharding import CPU_CTX
+    from repro.models.transformer import forward
+    toks = list(prompt)
+    for _ in range(n):
+        t = jnp.asarray(toks)[None]
+        pos = jnp.arange(len(toks), dtype=jnp.int32)[None]
+        logits, _, _ = forward(params, cfg, CPU_CTX, t, pos, "train")
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
+    return toks[len(prompt):]
 
 
 def positions_for(cfg, B, S, offset: int = 0):

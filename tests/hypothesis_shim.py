@@ -1,0 +1,81 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+Test modules import ``given``/``settings``/``strategies`` from here.  When
+the real ``hypothesis`` package is installed (the CI property-test job, or
+``pip install -e .[test]``) it is re-exported unchanged.  When it is absent
+a minimal seeded-random fallback runs each property test against a fixed
+number of pseudo-random examples, so ``pytest -x -q`` collects and exercises
+every module with zero extra dependencies.
+
+The fallback implements only the strategy surface this suite uses:
+``st.integers``, ``st.floats``, ``st.lists`` and ``st.tuples``.
+"""
+
+from __future__ import annotations
+
+try:                                       # pragma: no cover - env dependent
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies       # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.sample(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+    strategies = _Strategies()
+
+    _DEFAULT_EXAMPLES = 10
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        """Outermost decorator: records max_examples on the given-wrapper."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        """Run the test for N seeded examples (deterministic across runs)."""
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see the wrapper's own
+            # (empty) signature, not the property arguments of ``fn``,
+            # or it would try to resolve them as fixtures.
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                # keep the fallback cheap: it is a smoke net, not the full
+                # property search (CI runs real hypothesis separately)
+                n = min(n, _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    ex_args = [s.sample(rng) for s in arg_strats]
+                    ex_kw = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    fn(*args, *ex_args, **kwargs, **ex_kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -4,25 +4,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, strategies as st
 
-from conftest import make_reduced, positions_for
+from conftest import positions_for
 from repro.core.cdsp import chunked_prefill, history_to_decode_caches
-from repro.models.params import init_params
 from repro.models.sharding import CPU_CTX
 from repro.models.transformer import forward
 
 B = 2
 ARCHS = ["yi-9b", "mixtral-8x22b", "mamba2-1.3b", "jamba-1.5-large-398b"]
 
-_CACHE = {}
+# session-scoped (cfg, params) cache shared with every other module via the
+# conftest fixture; module-level alias so hypothesis-style helpers (which
+# don't receive fixtures) can reach it too
+_get = None
 
 
-def _get(name):
-    if name not in _CACHE:
-        cfg = make_reduced(name)
-        _CACHE[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
-    return _CACHE[name]
+@pytest.fixture(autouse=True)
+def _bind_cache(reduced_params_cache):
+    global _get
+    _get = reduced_params_cache
 
 
 @pytest.mark.parametrize("name", ARCHS)
@@ -38,6 +39,7 @@ def test_chunked_equals_monolithic(name, chunks):
     np.testing.assert_allclose(chunked, mono, atol=5e-5, rtol=2e-3)
 
 
+@pytest.mark.slow          # every drawn chunk plan compiles a fresh forward
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.integers(min_value=1, max_value=24), min_size=1,
                 max_size=5))

@@ -12,6 +12,24 @@ import pytest
 PROGS = os.path.join(os.path.dirname(__file__), "dist_progs")
 
 
+def _multi_device_host() -> bool:
+    if os.environ.get("RUN_DIST_TESTS"):
+        return True
+    import jax
+    return jax.device_count() >= 2 and jax.default_backend() != "cpu"
+
+
+# Subprocess programs force 8 host devices, which is exact but extremely
+# slow on small single-device CPU hosts; gate them so the default tier-1
+# run skips cleanly instead of timing out (set RUN_DIST_TESTS=1 to force).
+pytestmark = [
+    pytest.mark.distributed,
+    pytest.mark.skipif(not _multi_device_host(),
+                       reason="single-device CPU host "
+                              "(set RUN_DIST_TESTS=1 to run)"),
+]
+
+
 def _run(prog: str, timeout: int = 900) -> str:
     env = dict(os.environ)
     env.pop("JAX_PLATFORMS", None)

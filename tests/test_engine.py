@@ -1,38 +1,24 @@
 """Real-execution serving engine vs direct autoregressive generation."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_reduced
+from conftest import generate_dense as _generate
 from repro.core.latency_model import table1_model
-from repro.models.params import init_params
-from repro.models.sharding import CPU_CTX
-from repro.models.transformer import forward
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request
 from repro.serving.simulator import ClusterSpec, make_policy
 
 
-def _generate(params, cfg, prompt, n):
-    toks = list(prompt)
-    for _ in range(n):
-        t = jnp.asarray(toks)[None]
-        pos = jnp.arange(len(toks), dtype=jnp.int32)[None]
-        logits, _, _ = forward(params, cfg, CPU_CTX, t, pos, "train")
-        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
-    return toks[len(prompt):]
-
-
 @pytest.mark.parametrize("arch,policy", [
     ("yi-9b", "tetris"),
-    ("yi-9b", "fixed_sp_8"),
-    ("mamba2-1.3b", "tetris"),
+    # variants beyond the default tier (equivalence itself is also covered
+    # by tests/test_paged_engine.py on two archs)
+    pytest.param("yi-9b", "fixed_sp_8", marks=pytest.mark.slow),
+    pytest.param("mamba2-1.3b", "tetris", marks=pytest.mark.slow),
 ])
-def test_engine_matches_oracle(arch, policy):
-    cfg = make_reduced(arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
+def test_engine_matches_oracle(arch, policy, reduced_params_cache):
+    cfg, params = reduced_params_cache(arch)
     spec = ClusterSpec(n_prefill=16, n_decode=2, sp_candidates=(1, 2, 4, 8))
     eng = ServingEngine(cfg, params, spec, make_policy(policy,
                                                        table1_model(), spec),
@@ -52,10 +38,9 @@ def test_engine_matches_oracle(arch, policy):
         assert eng.reqs[req.rid].done is not None
 
 
-def test_engine_continuous_batching_overlap():
+def test_engine_continuous_batching_overlap(reduced_params_cache):
     """Requests arriving while others decode must join the running batch."""
-    cfg = make_reduced("yi-9b")
-    params = init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = reduced_params_cache("yi-9b")
     spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
     eng = ServingEngine(cfg, params, spec,
                         make_policy("tetris", table1_model(), spec),
@@ -64,7 +49,7 @@ def test_engine_continuous_batching_overlap():
     for i in range(3):
         plen = 40
         req = Request(rid=i, arrival=i * 0.01, prompt_len=plen,
-                      output_len=20)
+                      output_len=12)
         eng.submit(req, rng.integers(0, cfg.vocab_size, plen))
     eng.serve()
     # all three decoded on the same instance with interleaved token times

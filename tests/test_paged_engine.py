@@ -1,0 +1,252 @@
+"""Chunk-granular engine + paged KV: equivalence, event ordering,
+preemption/requeue, and the paged kernel primitives."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import generate_dense as _generate
+from repro.core.chunk_planner import Allocation, Chunk
+from repro.core.improvement_rate import DynamicRateController
+from repro.core.latency_model import table1_model
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec, Policy, make_policy
+
+MODEL = table1_model()
+
+
+class TwoChunkPolicy(Policy):
+    """Deterministic plan: prompts >= 32 tokens run as two chunks with an
+    SP-size change (1 -> 2); shorter remainders run single-chunk.  Keeps
+    chunk-granular paths exercised at test-sized prompts (the real CDSP
+    planner only chunks above min_chunk_tokens)."""
+    name = "two_chunk"
+
+    def plan(self, req, pool, now):
+        L = req.prompt_len
+        if L >= 32:
+            l0 = L // 2
+            t_q = max(pool[i] for i in (0,))
+            t0 = t_q + self.model.latency(1, 0, l0)
+            t1 = max(t0, pool[1]) + self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (0,), t_q, t0),
+                               Chunk(L - l0, (0, 1), t0, t1)])
+        t_q = max(pool[i] for i in (2,))
+        t_p = self.model.latency(1, 0, L)
+        return Allocation([Chunk(L, (2,), t_q, t_q + t_p)])
+
+
+def _spec():
+    return ClusterSpec(n_prefill=8, n_decode=2, sp_candidates=(1, 2, 4))
+
+
+# -------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("arch", ["yi-9b", "mamba2-1.3b"])
+def test_multichunk_paged_equivalence(arch, reduced_params_cache):
+    """Token-for-token: chunk-granular events + paged KV decode == direct
+    dense autoregressive generation, across an SP-size change mid-prefill."""
+    cfg, params = reduced_params_cache(arch)
+    spec = _spec()
+    eng = ServingEngine(cfg, params, spec, TwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=256, block_size=32)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(3):
+        plen = int(rng.integers(40, 90))
+        req = Request(rid=i, arrival=i * 0.03, prompt_len=plen, output_len=4)
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        eng.submit(req, prompt)
+        reqs.append((req, prompt))
+    outs = eng.serve()
+    for req, prompt in reqs:
+        assert len(req.chunk_plan) == 2, "plan must be multi-chunk"
+        want = _generate(params, cfg, prompt, len(outs[req.rid]))
+        assert outs[req.rid] == want, f"rid {req.rid} diverged"
+        assert req.done is not None
+
+
+# ------------------------------------------------------------ event ordering
+def test_chunks_execute_at_scheduled_times(reduced_params_cache):
+    """Every chunk's execution event fires exactly at the CDSP plan's
+    scheduled start; prefill_done is the last chunk's scheduled end."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=16, n_decode=2, sp_candidates=(1, 2, 4, 8))
+    eng = ServingEngine(cfg, params, spec,
+                        make_policy("tetris", MODEL, spec),
+                        max_batch=4, max_seq=256)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        plen = int(rng.integers(24, 80))
+        req = Request(rid=i, arrival=i * 0.05, prompt_len=plen, output_len=3)
+        eng.submit(req, rng.integers(0, cfg.vocab_size, plen))
+    eng.serve()
+    for r in eng.reqs.values():
+        assert len(r.chunk_exec) == len(r.chunk_plan) >= 1
+        for e, (s0, _) in zip(r.chunk_exec, r.chunk_sched):
+            assert e == pytest.approx(s0, abs=1e-9)
+        assert r.prefill_done == pytest.approx(r.chunk_sched[-1][1])
+        assert r.chunk_exec == sorted(r.chunk_exec)
+    # per-chunk log mirrors the request records
+    for rid, log in eng.chunk_log.items():
+        assert [c["exec_start"] for c in log] == eng.reqs[rid].chunk_exec
+
+
+# -------------------------------------------------------- preempt / requeue
+def test_preempt_requeues_and_matches_oracle(reduced_params_cache):
+    """Preempting between chunks cancels the remaining schedule, re-plans
+    the remainder under current load, and still generates exactly the
+    dense-reference tokens."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = _spec()
+    eng = ServingEngine(cfg, params, spec, TwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=256, block_size=32)
+    rng = np.random.default_rng(11)
+    plen = 64
+    req = Request(rid=0, arrival=0.0, prompt_len=plen, output_len=4)
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    eng.submit(req, prompt)
+    # flag lands after chunk 0 executes (t=0) and before chunk 1's slot
+    eng.preempt(0, at=1e-6)
+    outs = eng.serve()
+    assert req.preemptions == 1
+    # 3 chunks total: original chunk 0, then the requeued remainder
+    assert len(req.chunk_exec) == len(req.chunk_plan) == 3
+    assert req.chunk_plan[0][0] + req.chunk_plan[1][0] \
+        + req.chunk_plan[2][0] == plen
+    # the requeued chunk runs at its re-scheduled time, not the stale one
+    for e, (s0, _) in zip(req.chunk_exec, req.chunk_sched):
+        assert e == pytest.approx(s0, abs=1e-9)
+    want = _generate(params, cfg, prompt, len(outs[0]))
+    assert outs[0] == want, "preempted request diverged from reference"
+
+
+def test_preempt_with_delayed_replan(reduced_params_cache):
+    """If the pool can't take the remainder at preemption time, the old
+    plan must still be cancelled immediately (no stale chunk/prefill
+    events) and the request must complete once re-planning succeeds."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = _spec()
+
+    class DelayedReplanPolicy(TwoChunkPolicy):
+        def plan(self, req, pool, now):
+            if req.arrival > 0 and now < 0.2:
+                return None          # shadow re-plans rejected until t=0.2
+            return super().plan(req, pool, now)
+
+    eng = ServingEngine(cfg, params, spec,
+                        DelayedReplanPolicy(MODEL, spec),
+                        max_batch=4, max_seq=256, block_size=32)
+    rng = np.random.default_rng(13)
+    plen = 64
+    req = Request(rid=0, arrival=0.0, prompt_len=plen, output_len=3)
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    eng.submit(req, prompt)
+    eng.preempt(0, at=1e-6)
+    outs = eng.serve()
+    assert req.preemptions == 1
+    assert len(req.chunk_exec) == len(req.chunk_plan)
+    assert sum(c for c, _ in req.chunk_plan) == plen
+    assert req.chunk_exec[1] >= 0.2          # remainder ran after re-plan
+    want = _generate(params, cfg, prompt, len(outs[0]))
+    assert outs[0] == want
+
+
+# ------------------------------------------------------- controller wiring
+def test_rate_controller_wired_into_engine(reduced_params_cache):
+    """The engine feeds arrivals + chunk-boundary queue load into the
+    controller, and the policy's improvement rate comes from it."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    ctl = DynamicRateController({0.5: 0.1, 4.0: 0.6}, window=10.0,
+                                queue_gain=0.5)
+    eng = ServingEngine(cfg, params, spec,
+                        make_policy("tetris", MODEL, spec),
+                        max_batch=4, max_seq=256, rate_controller=ctl)
+    assert eng.policy.rate_fn == ctl.rate
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        plen = int(rng.integers(24, 60))
+        req = Request(rid=i, arrival=i * 0.02, prompt_len=plen, output_len=3)
+        eng.submit(req, rng.integers(0, cfg.vocab_size, plen))
+    outs = eng.serve()
+    assert len(ctl._arrivals) == 3
+    assert len(ctl._queue_obs) >= 3          # one per executed chunk
+    assert all(len(t) == 4 for t in outs.values())
+
+
+def test_engine_rejects_impossible_requests(reduced_params_cache):
+    """Oversized requests fail fast at submit (not an infinite transfer
+    retry loop); a policy-owned controller conflicting with
+    rate_controller fails fast at construction."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = _spec()
+    eng = ServingEngine(cfg, params, spec, TwoChunkPolicy(MODEL, spec),
+                        max_batch=2, max_seq=128, block_size=32)
+    big = Request(rid=0, arrival=0.0, prompt_len=250, output_len=10)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(big, np.zeros(250, np.int32))
+    from repro.serving.simulator import DynamicTetrisPolicy
+    pol = DynamicTetrisPolicy(MODEL, spec,
+                              DynamicRateController({1.0: 0.3}))
+    with pytest.raises(ValueError, match="controller"):
+        ServingEngine(cfg, params, spec, pol, max_batch=2, max_seq=128,
+                      rate_controller=DynamicRateController({1.0: 0.3}))
+
+
+# ------------------------------------------------------- paged primitives
+def test_paged_gather_scatter_roundtrip():
+    from repro.kernels.flash_decode import (gather_kv_pages,
+                                            scatter_kv_prefill,
+                                            scatter_kv_token)
+    rng = np.random.default_rng(0)
+    nb, B, KVH, D, page, npg = 2, 3, 2, 8, 8, 4
+    S = page * npg
+    k = jnp.asarray(rng.standard_normal((nb, B, S, KVH, D)), jnp.float32)
+    pool = jnp.zeros((nb, B * npg + 1, page, KVH, D), jnp.float32)
+    perm = rng.permutation(B * npg)          # non-contiguous physical pages
+    bt = np.zeros((B, npg), np.int32)
+    for b in range(B):
+        bt[b] = perm[b * npg:(b + 1) * npg]
+        pool = scatter_kv_prefill(pool, jnp.asarray(bt[b]), k[:, b])
+    bt = jnp.asarray(bt)
+    np.testing.assert_array_equal(np.asarray(gather_kv_pages(pool, bt)),
+                                  np.asarray(k))
+    lengths = jnp.asarray([5, 17, 31], jnp.int32)
+    new = jnp.asarray(rng.standard_normal((nb, B, KVH, D)), jnp.float32)
+    pool = scatter_kv_token(pool, bt, lengths, new)
+    dense = np.asarray(gather_kv_pages(pool, bt))
+    for b in range(B):
+        np.testing.assert_array_equal(dense[:, b, int(lengths[b])],
+                                      np.asarray(new[:, b]))
+        mask = np.ones(S, bool)
+        mask[int(lengths[b])] = False
+        np.testing.assert_array_equal(dense[:, b, mask],
+                                      np.asarray(k[:, b, mask]))
+
+
+def test_paged_flash_decode_matches_ref():
+    from repro.kernels.flash_decode import (paged_flash_decode,
+                                            scatter_kv_prefill)
+    from repro.kernels.ref import decode_attention_ref
+    rng = np.random.default_rng(1)
+    B, H, KVH, D, page, npg = 2, 4, 2, 16, 8, 3
+    S = page * npg
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    lengths = jnp.asarray([7, 20], jnp.int32)
+    pool_shape = (1, B * npg + 1, page, KVH, D)
+    kp, vp = jnp.zeros(pool_shape, jnp.float32), jnp.zeros(pool_shape,
+                                                           jnp.float32)
+    perm = rng.permutation(B * npg)
+    bt = np.zeros((B, npg), np.int32)
+    for b in range(B):
+        bt[b] = perm[b * npg:(b + 1) * npg]
+        kp = scatter_kv_prefill(kp, jnp.asarray(bt[b]), k[None, b])
+        vp = scatter_kv_prefill(vp, jnp.asarray(bt[b]), v[None, b])
+    got = paged_flash_decode(q, kp[0], vp[0], jnp.asarray(bt), lengths,
+                             interpret=True)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)

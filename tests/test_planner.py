@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, strategies as st
 
 from repro.core.chunk_planner import Allocation, CDSPScheduler
 from repro.core.latency_model import table1_model

@@ -3,7 +3,7 @@ decode routing, improvement-rate controller."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, strategies as st
 
 from repro.core.improvement_rate import DynamicRateController
 from repro.core.latency_model import DecodeLatencyModel, table1_model

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, strategies as st
 
 from repro.core.zigzag import (inverse_permutation, striped_permutation,
                                workload_imbalance, zigzag_permutation)
