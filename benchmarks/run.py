@@ -1,6 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows after each benchmark's own human-readable output.
 import argparse
+import json
 import os
 import sys
 import traceback
@@ -27,6 +28,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write the collected rows to this path as "
+                         "JSON [{name, us_per_call, derived}, ...] — used "
+                         "by CI to upload the BENCH_* trajectory artifact")
     args, _ = ap.parse_known_args()
     mods = [m for m in MODULES if args.only is None or args.only in m]
     rows, failures = [], []
@@ -42,6 +47,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if args.json:
+        recs = []
+        for r in rows:
+            name, us, derived = r.split(",", 2)
+            recs.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=2)
+        print(f"wrote {len(recs)} rows to {args.json}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -18,12 +18,20 @@ Paged variants for the serving engine's block-table KV layout
 * ``paged_flash_decode`` — the same streaming kernel with the page table as
   a scalar-prefetch argument; the KV BlockSpec index map dereferences the
   table so each grid step DMAs the right physical page (no materialised
-  dense copy).
-* ``gather_kv_pages`` / ``scatter_kv_token`` / ``scatter_kv_prefill`` —
-  jitted XLA gather/scatter between pools and dense per-step views, used by
-  the engine around the full-model decode step.
+  dense copy).  This is the TPU execution path behind
+  ``ops.paged_decode_attention``, which the model's decode attention uses
+  natively (models/attention.py); on CPU the gather fallback in
+  ``kernels/ref.paged_decode_attention_ref`` takes over.
+* ``scatter_kv_prefill`` — jitted XLA scatter that writes a request's
+  prefilled KV into its pages at admission (the production write path,
+  via PagedKVCache.write_prefill).  ``scatter_kv_token`` and
+  ``gather_kv_pages`` are validation/debug helpers only: the per-step
+  token append happens inline in the model's paged decode branch
+  (models/attention.py), which scatters into the pool and attends off it
+  without ever materialising the dense view.
 
-Validated against kernels/ref.decode_attention_ref in interpret mode.
+Validated against kernels/ref.decode_attention_ref in interpret mode
+(tests/test_kernels.py, tests/test_paged_engine.py).
 """
 
 from __future__ import annotations
@@ -151,7 +159,9 @@ def flash_decode(
 # ------------------------------------------------------------ paged layout
 @jax.jit
 def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
-    """Dense per-batch view of paged KV.
+    """Dense per-batch view of paged KV (debug/validation helper — the
+    serving decode path consumes the pool through block tables natively
+    and never materialises this).
 
     pool: (nb, n_pages, page, KVH, D); block_table: (B, pages_per_seq)
     int32 physical page ids -> (nb, B, pages_per_seq * page, KVH, D).
@@ -165,7 +175,9 @@ def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
 @jax.jit
 def scatter_kv_token(pool: jax.Array, block_table: jax.Array,
                      lengths: jax.Array, new: jax.Array) -> jax.Array:
-    """Write one token per sequence at logical position ``lengths[b]``.
+    """Write one token per sequence at logical position ``lengths[b]``
+    (validation/debug helper — production decode appends inline in
+    models/attention.py's paged branch).
 
     new: (nb, B, KVH, D).  Rows whose table points at a scratch page are
     harmless no-ops for live data (the engine pads inactive rows that way).
@@ -175,14 +187,6 @@ def scatter_kv_token(pool: jax.Array, block_table: jax.Array,
     phys = block_table[jnp.arange(B), lengths // page]         # (B,)
     return pool.at[:, phys, lengths % page].set(
         new.astype(pool.dtype))
-
-
-@jax.jit
-def take_token(dense: jax.Array, lengths: jax.Array) -> jax.Array:
-    """Extract the token each row just wrote at position ``lengths[b]``
-    from a dense (nb, B, S, KVH, D) cache view -> (nb, B, KVH, D)."""
-    B = dense.shape[1]
-    return dense[:, jnp.arange(B), lengths]
 
 
 @jax.jit

@@ -17,6 +17,7 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import paged_flash_decode as _paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 _FORCED = os.environ.get("REPRO_KERNEL_IMPL")  # ref | pallas | interpret
@@ -59,6 +60,34 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     return _flash_decode(q, k_cache, v_cache, lengths, window=window,
                          softmax_scale=softmax_scale, with_lse=with_lse,
                          kv_offset=kv_offset, interpret=(impl == "interpret"))
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           window: Optional[int] = None, softmax_scale=None,
+                           with_lse: bool = False, impl: Optional[str] = None):
+    """Block-table decode attention: one query token per sequence against a
+    paged KV pool, no dense ``(batch, max_seq)`` cache anywhere.
+
+    q: (B, H, D); k_pool/v_pool: (n_pages, page, KVH, D);
+    block_tables: (B, pages_per_seq) int32 physical page ids (pad dead rows
+    with a scratch page); lengths: (B,) valid cache length per sequence.
+
+    On TPU (``impl="pallas"``) this is ``paged_flash_decode`` — the block
+    table rides in as a scalar-prefetch argument and the kernel DMAs pages
+    directly from the pool.  On CPU (``impl="ref"``) it gathers the table
+    into a per-step dense view sized to the table width and reuses the
+    decode oracle; ``impl="interpret"`` runs the Pallas kernel body through
+    the interpreter for validation.
+    """
+    impl = impl or default_impl()
+    if impl in ("ref", "ref_blocked"):
+        return _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, block_tables, lengths, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse)
+    return _paged_flash_decode(q, k_pool, v_pool, block_tables, lengths,
+                               window=window, softmax_scale=softmax_scale,
+                               with_lse=with_lse,
+                               interpret=(impl == "interpret"))
 
 
 def ssd(x, dt, A, Bm, Cm, *, h0=None, chunk: int = 128,

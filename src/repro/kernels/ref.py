@@ -166,6 +166,36 @@ def decode_attention_ref(
     return res[:, 0]
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,                      # (B, H, D)
+    k_pool: jax.Array,                 # (n_pages, page, KVH, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,           # (B, pages_per_seq) int32 page ids
+    lengths: jax.Array,                # (B,) int32 — valid cache length
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    with_lse: bool = False,
+):
+    """Single-token decode attention straight off a paged KV pool.
+
+    Pure-JAX gather fallback for the block-table layout: dereference each
+    sequence's page list into a dense per-batch view sized to the current
+    table width (``pages_per_seq * page``, i.e. the longest live allocation
+    — NOT a global max_seq), then run ``decode_attention_ref``.  This is
+    the CPU/non-Pallas execution path behind
+    ``ops.paged_decode_attention``; on TPU the scalar-prefetch kernel
+    ``flash_decode.paged_flash_decode`` skips the materialisation entirely.
+    """
+    B, npg = block_tables.shape
+    page = k_pool.shape[1]
+    k = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, lengths, window=window,
+                                softmax_scale=softmax_scale,
+                                with_lse=with_lse)
+
+
 # ------------------------------------------------------------------ mamba-2
 def ssd_ref(x: jax.Array,              # (B, S, H, P)  — per-head inputs
             dt: jax.Array,             # (B, S, H)     — softplus'd step sizes

@@ -64,7 +64,14 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
     """Returns (out, new_cache_or_None).
 
     positions: (B, S) int32 (or (3, B, S) for M-RoPE) in storage order.
-    decode: x is (B, 1, d); cache {"k","v"}: (B, S_max, KVH, D); cache_len (B,).
+    decode: x is (B, 1, d); cache_len (B,); the cache is either
+      * dense — {"k","v"}: (B, S_max, KVH, D), or
+      * paged — {"k","v","block_table"} where k/v are physical pools
+        (n_pages, page, KVH, D) and block_table is (B, pages_per_seq)
+        int32 page ids (the serving engine's BlockManager layout).  The
+        new token's K/V is scattered into its page and attention runs
+        straight off the pool (Pallas scalar-prefetch kernel on TPU,
+        gather fallback elsewhere) — no dense (B, max_seq) view exists.
     history (CDSP chunked prefill): {"k","v","pos"} — previous chunks' KV,
     already re-balanced (evenly re-sharded) over the current chunk's group;
     position-array masking makes the cross-chunk causal mask automatic.
@@ -76,6 +83,35 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
 
     h_ax, kv_ax, _ = _qkv_specs(cfg, ctx, None)
     pos2d = positions[0] if positions.ndim == 3 else positions
+
+    if mode == "decode" and cache is not None and "block_table" in cache:
+        # native block-table paged decode: append this token's K/V into its
+        # physical page, then attend over the pool through the table.  Rows
+        # whose table points at the scratch page (inactive batch slots)
+        # write and read garbage that no caller consumes.
+        assert cache_len is not None
+        if ctx.kv_split_axis is not None and ctx.mesh is not None:
+            # a shard_map island that splits the paged pool over
+            # kv_split_axis does not exist yet (ROADMAP); fail loudly
+            # rather than silently replicating the whole pool per device
+            raise NotImplementedError(
+                "paged decode with ctx.kv_split_axis is not supported yet: "
+                "pools are per-instance; drop kv_split_axis or use dense "
+                "caches")
+        qd = q[:, 0]                                         # (B, H, D)
+        bt = cache["block_table"]                            # (B, npg) int32
+        k_pool, v_pool = cache["k"], cache["v"]
+        page = k_pool.shape[1]
+        bidx = jnp.arange(B)
+        phys = bt[bidx, cache_len // page]                   # (B,)
+        slot = cache_len % page
+        k_pool = k_pool.at[phys, slot].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[phys, slot].set(v[:, 0].astype(v_pool.dtype))
+        o = ops.paged_decode_attention(qd, k_pool, v_pool, bt,
+                                       cache_len + 1, window=window,
+                                       impl=ctx.impl)
+        out = out_proj(o[:, None], p, prefix)
+        return out, {"k": k_pool, "v": v_pool, "block_table": bt}
 
     if mode == "decode":
         assert cache is not None and cache_len is not None

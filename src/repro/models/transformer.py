@@ -10,6 +10,12 @@ layer) unroll the pattern *inside* the scan body.
 Modes: "train" (logits for loss), "prefill" (logits at last position +
 caches), "decode" (one token + updated caches).  Caches mirror the block
 structure: dict keyed by pattern position, leaves stacked over n_blocks.
+Decode attention caches come in two layouts (see models/attention.py):
+dense (B, S_max, KVH, D) buffers, or the serving engine's paged form —
+per-layer physical pools (n_blocks, n_pages, page, KVH, D) plus a shared
+``block_table`` leaf broadcast over n_blocks — which the scan threads
+through unchanged; the per-layer slice drops the n_blocks axis and the
+attention block consumes the table natively.
 """
 
 from __future__ import annotations
@@ -147,7 +153,10 @@ def forward(params: dict, cfg: ModelConfig, ctx: ExecContext,
     tokens: (B, S) int32 — or for pure-encoder input models, see
     ``encoder_frames`` (B, S_enc, d_model) stubbed frontend embeddings.
     Returns (logits, aux_loss, caches).
-    decode: tokens (B, 1); positions (B, 1) = cache_len; caches required.
+    decode: tokens (B, 1); positions (B, 1) = cache_len; caches required —
+    attention entries either dense per-sequence buffers or paged
+    {"k","v","block_table"} pools (see models/attention.py); the updated
+    caches come back in the same layout.
     """
     dtype = jnp.dtype(cfg.dtype)
     x = embed(tokens, params["embed"], dtype)

@@ -5,14 +5,25 @@ Llumnix-style "virtual usage": slots reserved for requests whose KV is
 still in flight from the prefill pool (Sec. 5.2).  The freeness rate used
 by the decode router is (free - virtual) / active_batch.
 
+Allocation is **grow-on-demand**: admission commits only the blocks that
+the request's *prefilled* KV actually occupies (``reserve_virtual`` +
+``commit``), and every decode step extends the allocation one block at a
+time as the sequence crosses page boundaries (``extend``).  A request
+therefore never holds pages for tokens it has not generated yet — the
+point of paged KV (vLLM / Infinite-LLM's DistAttention).  When ``extend``
+cannot be satisfied the engine preempts a victim request (recompute-style
+decode preemption, see serving/engine.py) instead of over-committing.
+
 ``PagedKVCache`` is the physical side: per attention layer a block pool of
-shape (n_blocks, total_blocks, block_size, KVH, D) indexed through the
+shape (n_blocks, total_blocks + 1, block_size, KVH, D) indexed through the
 BlockManager's per-request block lists (Infinite-LLM-style distributed
-paged layout, one pool per decode instance).  Decode gathers the active
-batch's pages into a dense view and scatters each new token's K/V back
-into its page (kernels/flash_decode.gather_kv_pages / scatter_kv_token).
-Block id ``total_blocks`` is a scratch page: padded batch rows write there
-so inactive rows can never corrupt live pages.
+paged layout, one pool per decode instance).  Prefilled KV is scattered
+into pages at admission (``write_prefill``); during decode the model's
+attention consumes the pools natively through block tables
+(models/attention.py + ops.paged_decode_attention) and returns the
+functionally-updated pools, which ``adopt`` folds back.  Block id
+``total_blocks`` is a scratch page: padded batch rows write there so
+inactive rows can never corrupt live pages.
 """
 
 from __future__ import annotations
@@ -23,6 +34,15 @@ from typing import Dict, List, Optional
 
 @dataclass
 class BlockManager:
+    """Block accounting for one decode instance.
+
+    ``total_blocks`` physical blocks of ``block_size`` tokens each.
+    ``allocs`` maps rid -> list of physical block ids (grown in place by
+    ``extend``); ``virtual_tokens`` maps rid -> tokens reserved while the
+    request's KV is still in flight (counted against admission via
+    ``can_fit``/``freeness`` but not yet backed by physical blocks).
+    """
+
     total_blocks: int
     block_size: int = 256
     free_blocks: Optional[List[int]] = None
@@ -35,31 +55,48 @@ class BlockManager:
 
     # ------------------------------------------------------------- queries
     def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` (ceil division)."""
         return -(-n_tokens // self.block_size)
 
     @property
     def n_free(self) -> int:
+        """Physical blocks currently on the free list."""
         return len(self.free_blocks)
 
     @property
     def virtual_blocks(self) -> int:
+        """Blocks promised to in-flight (not yet committed) requests."""
         return sum(self.blocks_for(t) for t in self.virtual_tokens.values())
 
     def freeness(self, batch_size: int) -> float:
+        """Llumnix freeness rate: effective free blocks per batch slot."""
         return (self.n_free - self.virtual_blocks) / (batch_size + 1.0)
 
     def can_fit(self, n_tokens: int) -> bool:
+        """True if ``n_tokens`` fit after honouring virtual reservations."""
         return self.blocks_for(n_tokens) <= self.n_free - self.virtual_blocks
+
+    def grow_blocks_needed(self, rid: int, n_tokens: int) -> int:
+        """Extra blocks ``rid`` needs to cover ``n_tokens`` (0 if covered)."""
+        return max(0, self.blocks_for(n_tokens) - len(self.allocs[rid]))
 
     # ----------------------------------------------------------- lifecycle
     def reserve_virtual(self, rid: int, n_tokens: int) -> bool:
+        """Reserve capacity for an in-flight transfer; False if it cannot
+        fit (the caller retries later).  A failed reserve leaves no entry
+        behind.  Under grow-on-demand the engine reserves only the tokens
+        whose KV is actually landing (the prefilled length), not the
+        request's full prompt+output budget."""
         if not self.can_fit(n_tokens):
             return False
         self.virtual_tokens[rid] = n_tokens
         return True
 
     def commit(self, rid: int) -> List[int]:
-        """Virtual reservation -> physical blocks (transfer complete)."""
+        """Virtual reservation -> physical blocks (transfer complete).
+
+        The engine calls reserve_virtual and commit within one event, so
+        decode-side ``extend`` can never race a pending reservation."""
         n = self.virtual_tokens.pop(rid)
         need = self.blocks_for(n)
         assert need <= self.n_free, "accounting violated"
@@ -68,7 +105,10 @@ class BlockManager:
         return blocks
 
     def extend(self, rid: int, n_tokens: int) -> bool:
-        """Grow an allocation to cover n_tokens (decode appends)."""
+        """Grow ``rid``'s allocation to cover ``n_tokens`` (decode appends
+        crossing a page boundary).  Mutates the allocation list in place —
+        holders of the list (the engine's per-request metadata) observe the
+        growth.  False if the pool is exhausted; the engine then preempts."""
         need = self.blocks_for(n_tokens) - len(self.allocs[rid])
         if need <= 0:
             return True
@@ -78,6 +118,7 @@ class BlockManager:
         return True
 
     def release(self, rid: int) -> None:
+        """Return all of ``rid``'s blocks (and any virtual reservation)."""
         self.free_blocks += self.allocs.pop(rid, [])
         self.virtual_tokens.pop(rid, None)
 
@@ -88,6 +129,12 @@ class PagedKVCache:
     Non-attention per-request state (SSD state, conv windows, cross-attn
     KV) is O(1) or fixed-size in the sequence dimension and is kept as
     small per-request trees by the engine; only attention KV is paged.
+
+    ``pools`` maps pattern position -> {"k","v"} arrays of shape
+    (n_blocks, total_blocks + 1, block_size, KVH, D): the leading n_blocks
+    axis matches the transformer's layer scan, so the engine hands the
+    pools straight into ``forward(mode="decode")`` as the cache tree and
+    the scan slices one pool page-set per block.
     """
 
     def __init__(self, cfg, total_blocks: int, block_size: int,
@@ -125,17 +172,13 @@ class PagedKVCache:
                 self.pools[str(i)]["v"], blk, v)
 
     # -------------------------------------------------------------- decode
-    def gather(self, layer: int, block_table) -> dict:
-        from repro.kernels.flash_decode import gather_kv_pages
-        p = self.pools[str(layer)]
-        return {"k": gather_kv_pages(p["k"], block_table),
-                "v": gather_kv_pages(p["v"], block_table)}
+    def adopt(self, new_caches: dict) -> None:
+        """Fold one decode step's functionally-updated pools back in.
 
-    def append_token(self, layer: int, block_table, lengths,
-                     k_new, v_new) -> None:
-        """Write one new token's K/V per batch row (padded rows must point
-        their table at the scratch page)."""
-        from repro.kernels.flash_decode import scatter_kv_token
-        p = self.pools[str(layer)]
-        p["k"] = scatter_kv_token(p["k"], block_table, lengths, k_new)
-        p["v"] = scatter_kv_token(p["v"], block_table, lengths, v_new)
+        The model's paged decode branch scattered each live row's new K/V
+        token into its page and returned the updated pools in the cache
+        tree; the pool arrays here are simply replaced (no copy — JAX
+        donated/updated buffers)."""
+        for i in self.attn_layers:
+            ent = new_caches[str(i)]["self"]
+            self.pools[str(i)] = {"k": ent["k"], "v": ent["v"]}

@@ -6,9 +6,18 @@ scheduler's plan says it runs (per-chunk SP sizes, queueing and mid-prefill
 preemption/requeue all happen at chunk boundaries, like the paper's
 fine-grained SP), KV hands off to decode instances through per-chunk
 handshake transfers, and decode reads/writes KV through BlockManager block
-tables over a paged physical pool (serving/cache_manager.PagedKVCache +
-kernels/flash_decode gather/scatter) instead of dense (max_batch, max_seq)
-slot buffers.
+tables over a paged physical pool (serving/cache_manager.PagedKVCache).
+
+Decode is *natively paged*: the model's attention consumes the pools
+through block tables (models/attention.py — Pallas scalar-prefetch kernel
+on TPU, gather fallback on CPU), so no dense ``(batch, max_seq)`` KV view
+is ever materialised.  Blocks are allocated **grow-on-demand**: admission
+commits only the prefilled KV's pages, each decode tick extends
+allocations as sequences cross page boundaries, and on pool exhaustion (or
+when free blocks fall under ``preempt_watermark``) the engine preempts the
+newest-arrival resident — recompute-style: its blocks are dropped and the
+generated prefix is re-prefilled through the normal CDSP plan/requeue
+path, token-for-token identical to the uninterrupted run.
 
 A DynamicRateController can be wired directly into the engine: arrivals and
 chunk-boundary queue backlog feed its sliding windows, and the policy's
@@ -16,10 +25,14 @@ improvement rate — the gate on SP expansion — comes from the controller's
 observed load rather than a fixed constant.
 
 Per-chunk timing is exposed in ``chunk_log`` / ``Request.chunk_sched`` /
-``Request.chunk_exec`` so benchmarks can compare executed against simulated
-TTFT/TBT.  On CPU this serves reduced models end-to-end (tests/test_engine,
-tests/test_paged_engine); on TPU the same engine executes on sharded meshes
-via the ExecContext.
+``Request.chunk_exec``, and decode preemptions in ``preempt_log``, so
+benchmarks can compare executed against simulated TTFT/TBT and track
+memory-pressure behaviour.  On CPU this serves reduced models end-to-end
+(tests/test_engine, tests/test_paged_engine); on TPU the same engine
+executes on sharded meshes via the ExecContext — except that the paged
+decode pools are per-instance and do not yet compose with
+``ctx.kv_split_axis`` split-KV decode (models/attention.py raises loudly
+on that combination; see ROADMAP).
 """
 
 from __future__ import annotations
@@ -54,9 +67,14 @@ class _PrefillState:
 
 @dataclass
 class _DecodeMeta:
+    """Per-resident-request decode bookkeeping.
+
+    ``blocks`` aliases the BlockManager's allocation list for the request,
+    so grow-on-demand ``extend`` calls are visible here without copying.
+    """
     row: int                            # batch row (stable while resident)
-    cache_len: int
-    last_token: int
+    cache_len: int                      # tokens resident in the paged pool
+    last_token: int                     # next model input
     blocks: List[int] = field(default_factory=list)
 
 
@@ -64,12 +82,14 @@ class PagedDecodeState:
     """Block-table KV decode state for one decode instance.
 
     Attention KV lives in a PagedKVCache pool addressed through the
-    BlockManager's per-request block lists; each decode tick gathers the
-    active batch's pages into a dense view sized to the *current* longest
-    allocation (not max_seq), runs the model step, and scatters the new
-    token's K/V back into its page.  Non-attention per-request state (SSD
-    state, conv window, cross KV) is O(1) in sequence length and kept as
-    small per-request trees, stacked per tick.
+    BlockManager's per-request block lists.  Each decode tick hands the
+    pools plus the active batch's block table straight into the model —
+    attention consumes the table natively (models/attention.py), scatters
+    the new token's K/V into its page, and returns the updated pools,
+    which ``absorb`` folds back.  No dense ``(batch, max_seq)`` KV view is
+    built at any point.  Non-attention per-request state (SSD state, conv
+    window, cross KV) is O(1) in sequence length and kept as small
+    per-request trees, stacked per tick.
     """
 
     def __init__(self, cfg: ModelConfig, max_batch: int, max_seq: int,
@@ -90,13 +110,9 @@ class PagedDecodeState:
         self.aux: Dict[int, dict] = {}     # rid -> non-attn cache tree (B=1)
         self.transfers = TransferManager(n_backends=n_backends,
                                          bandwidth=bandwidth)
-        # memo of the last tick's dense view: (batch signature, cache tree).
-        # While batch membership is stable the model step's own output IS
-        # the next dense view; the pool stays authoritative via scatter and
-        # is re-gathered whenever membership (and hence layout) changes.
-        self._dense: Optional[tuple] = None
 
     def free_slot(self) -> Optional[int]:
+        """Lowest free batch row, or None when the instance is full."""
         for i, s in enumerate(self.slots):
             if s is None:
                 return i
@@ -109,8 +125,9 @@ class PagedDecodeState:
     # ------------------------------------------------------------- insert
     def insert(self, row: int, rid: int, caches: dict, cache_len: int,
                last_token: int) -> None:
-        """Admit a request: commit its virtual block reservation, scatter
-        its prefilled attention KV into the pages, keep aux state."""
+        """Admit a request: commit its virtual block reservation (sized to
+        the prefilled KV only — growth happens per decode tick), scatter
+        the prefilled attention KV into the pages, keep aux state."""
         blocks = self.blocks.commit(rid)
         self.slots[row] = rid
         self.meta[rid] = _DecodeMeta(row, cache_len, last_token, blocks)
@@ -127,6 +144,7 @@ class PagedDecodeState:
         self.aux[rid] = aux
 
     def evict(self, rid: int) -> None:
+        """Drop a request (finished or preempted) and release its blocks."""
         m = self.meta.pop(rid)
         self.slots[m.row] = None
         self.aux.pop(rid, None)
@@ -134,8 +152,9 @@ class PagedDecodeState:
 
     # -------------------------------------------------------------- batch
     def block_table(self, active: List[int]):
-        """(max_batch, max_blocks) physical page table; inactive rows point
-        at the scratch page so their writes can never corrupt live data."""
+        """(max_batch, max_blocks) physical page table sized to the longest
+        *live allocation* (not max_seq); inactive rows point at the scratch
+        page so their writes can never corrupt live data."""
         maxb = max(len(self.meta[r].blocks) for r in active)
         bt = np.full((self.max_batch, maxb), self.kv.scratch_block, np.int32)
         for r in active:
@@ -144,14 +163,21 @@ class PagedDecodeState:
         return jnp.asarray(bt)
 
     def build_caches(self, active: List[int], bt) -> dict:
-        """Assemble the dense cache tree for one decode step: paged gather
-        for attention layers, per-request aux rows stacked for the rest."""
+        """Assemble the decode-step cache tree: attention layers get the
+        physical pools plus the block table (broadcast over the layer-scan
+        axis) — consumed natively, never gathered dense — and per-request
+        aux rows are stacked for everything else."""
         caches = {}
+        bt_b = None
         for i, spec in enumerate(self.cfg.pattern):
             key = str(i)
             ent = {}
             if spec.mixer == "attn":
-                ent["self"] = self.kv.gather(i, bt)
+                if bt_b is None:
+                    bt_b = jnp.broadcast_to(
+                        bt[None], (self.cfg.n_blocks,) + tuple(bt.shape))
+                p = self.kv.pools[key]
+                ent["self"] = {"k": p["k"], "v": p["v"], "block_table": bt_b}
             else:
                 ent["self"] = self._stack_rows(active, key, "self")
             if any("cross" in self.aux[r].get(key, {}) for r in active):
@@ -165,15 +191,11 @@ class PagedDecodeState:
         rows = [by_row.get(i, template) for i in range(self.max_batch)]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *rows)
 
-    def absorb(self, new_caches: dict, active: List[int], bt, clen) -> None:
-        """Fold one decode step's outputs back: scatter each new token's
-        K/V into its page, re-slice updated aux state per request."""
-        from repro.kernels.flash_decode import take_token
-        for i in self.kv.attn_layers:
-            ent = new_caches[str(i)]["self"]
-            self.kv.append_token(i, bt, clen,
-                                 take_token(ent["k"], clen),
-                                 take_token(ent["v"], clen))
+    def absorb(self, new_caches: dict, active: List[int]) -> None:
+        """Fold one decode step's outputs back: adopt the updated pools
+        (the model already scattered each new token's K/V into its page)
+        and re-slice updated aux state per request."""
+        self.kv.adopt(new_caches)
         for r in active:
             row = self.meta[r].row
             for key, ent in self.aux[r].items():
@@ -184,26 +206,50 @@ class PagedDecodeState:
 
 
 class ServingEngine(Simulator):
+    """Chunk-granular real-execution engine over the event-clock Simulator.
+
+    Adds to the Simulator: real CDSP prefill chunk execution, per-chunk
+    handshake transfers, natively-paged decode with grow-on-demand block
+    allocation, and preemption — mid-prefill at chunk boundaries and
+    decode-side on block exhaustion / under the free-block watermark.
+
+    ``preempt_watermark`` (fraction of the block pool, default 0 = off)
+    arms the automatic policy: whenever a decode tick would leave fewer
+    than ``watermark * total_blocks`` free blocks, the newest-arrival
+    resident is preempted *before* the pool is hard-exhausted; with the
+    default 0 the engine still preempts, but only on actual exhaustion.
+    Every decode preemption appends a record to ``preempt_log``
+    (t/rid/instance/reason/free_blocks/generated).
+    """
+
     def __init__(self, cfg: ModelConfig, params: dict, spec: ClusterSpec,
                  policy: Policy, *, ctx: ExecContext = CPU_CTX,
                  max_batch: int = 8, max_seq: int = 512,
                  block_size: int = 64,
                  decode_model: Optional[DecodeLatencyModel] = None,
-                 rate_controller: Optional[DynamicRateController] = None):
+                 rate_controller: Optional[DynamicRateController] = None,
+                 preempt_watermark: float = 0.0):
         super().__init__(spec, policy, decode_model)
         assert spec.disaggregated, "real engine decode is disaggregated"
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
+        self.preempt_watermark = preempt_watermark
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.chunk_log: Dict[int, List[dict]] = {}
+        self.preempt_log: List[dict] = []
         self.dstates = [PagedDecodeState(cfg, max_batch, max_seq, block_size,
                                          n_backends=spec.backends_per_decode,
                                          bandwidth=spec.transfer_bw)
                         for _ in range(spec.n_decode)]
         self._prefill: Dict[int, _PrefillState] = {}
-        self._preempt_flags: set = set()
+        self._preempt_flags: set = set()          # mid-prefill
+        self._decode_preempt_flags: set = set()   # decode, at next tick
+        # recompute-preemption state: outputs to restore after re-prefill,
+        # and the token sequence (prompt + generated prefix) to re-prefill
+        self._resume: Dict[int, List[int]] = {}
+        self._resume_seq: Dict[int, np.ndarray] = {}
         self.controller = rate_controller
         if rate_controller is not None:
             own = getattr(policy, "controller", None)
@@ -217,10 +263,12 @@ class ServingEngine(Simulator):
 
     # ---------------------------------------------------------------- api
     def submit(self, req: Request, prompt_tokens: np.ndarray) -> None:
+        """Enqueue a request for service.  Rejects requests whose worst-case
+        cache (prompt + output) exceeds the decode block pool — those could
+        never be admitted and would spin in the transfer retry loop."""
         d = self.dstates[0]
         cap = d.blocks.total_blocks * d.block_size
         if req.prompt_len + req.output_len > cap:
-            # would otherwise spin forever in the transfer_done retry loop
             raise ValueError(
                 f"request {req.rid} needs {req.prompt_len + req.output_len} "
                 f"cache tokens > decode pool capacity {cap} "
@@ -230,25 +278,43 @@ class ServingEngine(Simulator):
         self._push(req.arrival, "arrive", req.rid)
 
     def serve(self) -> Dict[int, List[int]]:
+        """Drain the event heap; returns rid -> generated tokens."""
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)
             getattr(self, f"_on_{kind}")(t, payload)
         return self.outputs
 
     def preempt(self, rid: int, at: Optional[float] = None) -> None:
-        """Flag ``rid`` for mid-prefill preemption: at the next chunk
-        boundary its remaining chunks are cancelled and the remainder of
-        the prompt is re-planned (requeued) under the then-current load.
-        With ``at`` the flag is set by an event at that virtual time;
-        without it the flag applies immediately (e.g. before serve())."""
+        """Flag ``rid`` for preemption.
+
+        QUEUED/PREFILL: at the next chunk boundary the remaining chunks are
+        cancelled and the remainder of the prompt is re-planned (requeued)
+        under the then-current load.  DECODE — or TRANSFER, honoured once
+        the request has joined a decode batch: at the instance's next
+        decode tick the request is evicted (blocks released) and its
+        generated prefix is re-prefilled — recompute preemption,
+        token-for-token identical after resume.  With ``at`` the flag is
+        set by an event at that virtual time; without it the flag applies
+        immediately (e.g. before serve()).  The engine also preempts
+        automatically on block exhaustion / watermark — no manual call
+        needed."""
         if at is not None:
             self._push(at, "preempt", rid)
             return
         req = self.reqs.get(rid)
-        if req is not None and req.phase in (Phase.QUEUED, Phase.PREFILL):
+        if req is None:
+            return
+        if req.phase in (Phase.QUEUED, Phase.PREFILL):
             self._preempt_flags.add(rid)
+        elif req.phase in (Phase.TRANSFER, Phase.DECODE):
+            self._decode_preempt_flags.add(rid)
 
     # ------------------------------------------------- chunk-granular prefill
+    def _prefill_seq(self, rid: int) -> np.ndarray:
+        """Token sequence the current prefill runs over: the prompt, or —
+        after a decode preemption — prompt + already-generated prefix."""
+        return self._resume_seq.get(rid, self.prompts[rid])
+
     def _on_arrive(self, now: float, rid: int) -> None:
         # engine-level controller observes arrivals unless the policy owns
         # the same controller (DynamicTetrisPolicy observes via on_arrival)
@@ -278,8 +344,9 @@ class ServingEngine(Simulator):
             return
         super()._on_chunk_start(now, payload)
         req, st = self.reqs[rid], self._prefill[rid]
+        seq = self._prefill_seq(rid)
         L, sp = req.chunk_plan[ci]
-        toks = jnp.asarray(self.prompts[rid][None, st.off:st.off + L])
+        toks = jnp.asarray(seq[None, st.off:st.off + L])
         st.logits, st.history = prefill_chunk(
             self.params, self.cfg, self.ctx, toks,
             self._positions(st.off, L), st.history)
@@ -292,17 +359,28 @@ class ServingEngine(Simulator):
             pool = self._pool_view(now)
             self.controller.observe_queue(
                 now, sum(pool.values()) / max(len(pool), 1))
-        if st.off >= req.prompt_len:
+        if st.off >= len(seq):
             self._preempt_flags.discard(rid)   # nothing left to preempt
-            self.outputs[rid] = [int(jnp.argmax(
-                st.logits[0, 0, :self.cfg.vocab_size]))]
+            prior = self._resume.pop(rid, None)
+            if prior is not None:
+                # recompute resume: greedy decoding is deterministic, so
+                # the re-prefill regenerates the same prefix — restore the
+                # already-emitted tokens rather than re-emitting them
+                self.outputs[rid] = prior
+            else:
+                self.outputs[rid] = [int(jnp.argmax(
+                    st.logits[0, 0, :self.cfg.vocab_size]))]
+            self._resume_seq.pop(rid, None)
 
     def _on_preempt(self, now: float, rid: int) -> None:
         req = self.reqs.get(rid)
-        if (req is not None and req.phase == Phase.PREFILL
-                and rid in self._prefill
-                and self._prefill[rid].off < req.prompt_len):
+        if req is None:
+            return
+        if (req.phase == Phase.PREFILL and rid in self._prefill
+                and self._prefill[rid].off < len(self._prefill_seq(rid))):
             self._preempt_flags.add(rid)
+        elif req.phase in (Phase.TRANSFER, Phase.DECODE):
+            self._decode_preempt_flags.add(rid)
 
     def _on_requeue(self, now: float, rid: int) -> None:
         self._requeue(now, rid, first=False)
@@ -321,7 +399,7 @@ class ServingEngine(Simulator):
             req.chunk_plan = req.chunk_plan[:executed]
             req.chunk_sched = req.chunk_sched[:executed]
             self._cancel_bookings(now, rid, executed)
-        remaining = req.prompt_len - st.off
+        remaining = len(self._prefill_seq(rid)) - st.off
         shadow = Request(rid=rid, arrival=now, prompt_len=remaining,
                          output_len=req.output_len)
         alloc = self.policy.plan(shadow, self._pool_view(now), now)
@@ -352,9 +430,12 @@ class ServingEngine(Simulator):
     def _on_transfer_done(self, now: float, rid: int) -> None:
         req = self.reqs[rid]
         d = self.dstates[req.decode_instance]
-        need = req.prompt_len + req.output_len
+        # grow-on-demand admission: reserve only the blocks the prefilled
+        # KV occupies right now — decode growth is paid per tick, with
+        # preemption (not over-reservation) covering exhaustion
+        resident = self._prefill[rid].off
         row = d.free_slot()
-        if row is None or not d.blocks.reserve_virtual(rid, need):
+        if row is None or not d.blocks.reserve_virtual(rid, resident):
             # decode instance saturated: hold the backend, retry shortly
             # (a failed reserve leaves no virtual entry behind)
             self._push(now + 0.05, "transfer_done", rid)
@@ -362,13 +443,108 @@ class ServingEngine(Simulator):
         d.transfers.complete(rid)
         st = self._prefill.pop(rid)
         caches, _ = history_to_decode_caches(self.cfg, st.history,
-                                             max_seq=req.prompt_len)
-        d.insert(row, rid, caches, req.prompt_len, self.outputs[rid][-1])
+                                             max_seq=resident)
+        d.insert(row, rid, caches, resident, self.outputs[rid][-1])
         super()._on_transfer_done(now, rid)
+        # resumed requests: the parent books a fresh prompt-sized join, but
+        # the re-prefilled generated prefix is resident too — charge it and
+        # drop it from the remaining-growth commitment
+        if req.generated:
+            inst = self.decodes[req.decode_instance]
+            inst.slots_free -= req.generated
+            inst.virtual -= req.generated
 
     # --------------------------------------------------------- real decode
+    def _watermark_blocks(self, d: PagedDecodeState) -> int:
+        return int(np.ceil(self.preempt_watermark * d.blocks.total_blocks))
+
+    def _preempt_decode(self, now: float, rid: int, reason: str) -> None:
+        """Recompute-preempt a decode-resident request: release its blocks,
+        leave the continuous batch, and requeue the full generated prefix
+        (prompt + emitted tokens) through the normal CDSP plan path.  The
+        emitted tokens are restored verbatim when the re-prefill completes
+        (greedy decoding is deterministic), so generation is token-for-token
+        identical to an unpreempted run."""
+        req = self.reqs[rid]
+        did = req.decode_instance
+        d, inst = self.dstates[did], self.decodes[did]
+        outs = self.outputs[rid]
+        self.preempt_log.append({
+            "t": now, "rid": rid, "instance": did, "reason": reason,
+            "free_blocks": d.blocks.n_free, "generated": len(outs),
+            "chunks_discarded": len(req.chunk_plan or [])})
+        d.evict(rid)
+        # the evicted KV is gone — the executed chunk history goes with it,
+        # so the resume plan (and its handshake transfer) covers exactly
+        # the re-prefilled chunks, not the discarded first-stint ones
+        req.chunk_plan = []
+        req.chunk_sched = []
+        req.chunk_exec = []
+        self.chunk_log.pop(rid, None)
+        for r in inst.batch:
+            if r.rid == rid:
+                inst.batch.remove(r)
+                break
+        # parent grow-on-demand accounting: resident tokens come back, the
+        # not-yet-generated growth commitment is dropped
+        inst.slots_free += req.prompt_len + req.generated
+        inst.virtual -= req.output_len - req.generated
+        req.preemptions += 1
+        req.phase = Phase.QUEUED
+        req.decode_instance = None
+        base = np.asarray(self.prompts[rid])
+        self._resume[rid] = list(outs)
+        self._resume_seq[rid] = (
+            np.concatenate([base, np.asarray(outs[:-1], base.dtype)])
+            if len(outs) > 1 else base.copy())
+        self._prefill[rid] = _PrefillState()
+        self._push(now, "requeue", rid)
+
+    def _grow_or_preempt(self, now: float, did: int) -> None:
+        """Before a decode step: honour manual decode-preempt flags, then
+        extend every resident's allocation to cover the token this tick
+        appends.  Growth is granted oldest-arrival first; when it would
+        exhaust the pool (or dip under the watermark while a victim
+        exists), the newest-arrival resident is recompute-preempted until
+        the step fits.  A lone resident may always grow — submit() bounds
+        its worst case to the pool, and preempting it could never help."""
+        d = self.dstates[did]
+        bm = d.blocks
+        for rid in [r for r in d.slots
+                    if r is not None and r in self._decode_preempt_flags]:
+            self._decode_preempt_flags.discard(rid)
+            self._preempt_decode(now, rid, reason="manual")
+        wm = self._watermark_blocks(d)
+        order = sorted((r for r in d.slots if r is not None),
+                       key=lambda r: (self.reqs[r].arrival, r))
+        for rid in order:
+            if rid not in d.meta:
+                continue                   # became a victim this tick
+            while True:
+                m = d.meta[rid]
+                need = bm.grow_blocks_needed(rid, m.cache_len + 1)
+                if need == 0:
+                    break
+                resident = [r for r in d.slots if r is not None]
+                floor = wm if len(resident) > 1 else 0
+                if len(resident) <= 1 or bm.n_free - need >= floor:
+                    # a lone resident may dip below the watermark; its
+                    # worst case is pool-bounded by submit(), so a failed
+                    # extend here is an accounting bug, not a full pool
+                    grew = bm.extend(rid, m.cache_len + 1)
+                    assert grew, (rid, need, bm.n_free)
+                    break
+                victim = max(resident,
+                             key=lambda r: (self.reqs[r].arrival, r))
+                self._preempt_decode(
+                    now, victim,
+                    reason="exhaustion" if bm.n_free < need else "watermark")
+                if victim == rid:
+                    break
+
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
+        self._grow_or_preempt(now, did)
         active = [r for r in d.slots if r is not None]
         if active:
             B = d.max_batch
@@ -382,16 +558,11 @@ class ServingEngine(Simulator):
             pos = (jnp.broadcast_to(clen[None, :, None], (3, B, 1))
                    if self.cfg.rope_type == "mrope" else clen[:, None])
             bt = d.block_table(active)
-            sig = (tuple(d.slots), int(bt.shape[1]))
-            if d._dense is not None and d._dense[0] == sig:
-                caches = d._dense[1]       # batch unchanged since last tick
-            else:
-                caches = d.build_caches(active, bt)
+            caches = d.build_caches(active, bt)
             logits, _, new_caches = forward(
                 self.params, self.cfg, self.ctx, toks, pos, "decode",
                 caches=caches, cache_len=clen)
-            d.absorb(new_caches, active, bt, clen)
-            d._dense = (sig, new_caches)
+            d.absorb(new_caches, active)
             nxt = np.asarray(jnp.argmax(
                 logits[:, 0, :self.cfg.vocab_size], axis=-1))
             for r in active:
@@ -406,3 +577,4 @@ class ServingEngine(Simulator):
         super()._on_decode_tick(now, did)
         for rid in finished_before:
             d.evict(rid)
+            self._decode_preempt_flags.discard(rid)

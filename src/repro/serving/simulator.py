@@ -163,9 +163,23 @@ def make_policy(name: str, model: PrefillLatencyModel, spec: ClusterSpec,
 # --------------------------------------------------------------- simulator
 @dataclass
 class DecodeInstance:
+    """Decode-side capacity accounting, grow-on-demand token granular.
+
+    ``slots_free`` counts tokens NOT currently resident in the KV cache —
+    a request consumes its prompt at batch join and one more slot per
+    generated token, releasing ``cache_tokens`` when it finishes (or is
+    preempted, in the real engine).  ``virtual`` carries the worst-case
+    commitments that are not yet resident: the full prompt+output of
+    requests whose KV is in flight, plus each resident request's
+    not-yet-generated remainder.  ``slots_free - virtual`` is therefore
+    exactly the admissible worst-case headroom (identical to committing
+    full budgets up front), so routing and the overcommit guard are
+    unchanged while ``slots_free`` honestly reflects grow-on-demand
+    residency.
+    """
     did: int
     slots_free: int
-    virtual: int = 0                       # reserved during transfer
+    virtual: int = 0                       # in-flight + ungrown commitments
     batch: List[Request] = field(default_factory=list)
     ticking: bool = False
     backends_free: int = 8
@@ -352,10 +366,11 @@ class Simulator:
             self._start_transfer(now, d, nxt)
         else:
             d.backends_free += 1
-        # join continuous batch
-        need = req.prompt_len + req.output_len
-        d.virtual -= need
-        d.slots_free -= need
+        # join continuous batch: grow-on-demand — only the prompt KV is
+        # resident now; the output remainder stays a virtual commitment
+        # that each decode tick converts into residency token by token
+        d.virtual -= req.prompt_len
+        d.slots_free -= req.prompt_len
         req.phase = Phase.DECODE
         d.batch.append(req)
         if not d.ticking:
@@ -377,11 +392,13 @@ class Simulator:
             r.token_times.append(t_next)
             if r.first_token is None:
                 r.first_token = t_next
+            d.slots_free -= 1              # this token's KV is now resident
+            d.virtual -= 1                 # ...and no longer a commitment
             if r.generated >= r.output_len:
                 finished.append(r)
         for r in finished:
             d.batch.remove(r)
-            d.slots_free += r.prompt_len + r.output_len
+            d.slots_free += r.cache_tokens
             r.phase = Phase.DONE
             r.done = t_next
         self._push(t_next, "decode_tick", did)

@@ -1,5 +1,6 @@
 """Chunk-granular engine + paged KV: equivalence, event ordering,
-preemption/requeue, and the paged kernel primitives."""
+preemption/requeue (mid-prefill and decode-side), grow-on-demand block
+allocation under pool pressure, and the paged kernel primitives."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -152,6 +153,127 @@ def test_preempt_with_delayed_replan(reduced_params_cache):
     assert outs[0] == want
 
 
+# -------------------------------------------- grow-on-demand / exhaustion
+class ParallelTwoChunkPolicy(TwoChunkPolicy):
+    """TwoChunkPolicy, but each request prefills on its own instance pair
+    (by rid) so several requests become co-resident in decode — needed to
+    create genuine block-pool pressure at test scale."""
+    name = "parallel_two_chunk"
+
+    def plan(self, req, pool, now):
+        L = req.prompt_len
+        base = (2 * req.rid) % (self.spec.n_prefill - 1)
+        if L >= 32:
+            l0 = L // 2
+            t_q = pool[base]
+            t0 = t_q + self.model.latency(1, 0, l0)
+            t1 = max(t0, pool[base + 1]) + self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (base,), t_q, t0),
+                               Chunk(L - l0, (base, base + 1), t0, t1)])
+        t_q = pool[base]
+        t_p = self.model.latency(1, 0, L)
+        return Allocation([Chunk(L, (base,), t_q, t_q + t_p)])
+
+
+def _serve_batch(cfg, params, max_seq, *, n_req=3, prompt_len=60,
+                 output_len=12, watermark=0.0):
+    """Serve ``n_req`` identical-shape requests on one decode instance with
+    a block pool of ``4 * max_seq / 16`` blocks; returns the engine."""
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=max_seq, block_size=16,
+                        preempt_watermark=watermark)
+    rng = np.random.default_rng(21)
+    for i in range(n_req):
+        # near-simultaneous arrivals: everyone is admitted (at prompt-sized
+        # allocations) before the first page-boundary crossing, so decode
+        # growth — not admission — is what hits the pool limit
+        req = Request(rid=i, arrival=i * 0.005, prompt_len=prompt_len,
+                      output_len=output_len)
+        eng.submit(req, rng.integers(0, cfg.vocab_size,
+                                     prompt_len).astype(np.int32))
+    eng.serve()
+    return eng
+
+
+def test_block_exhaustion_preemption_equivalence(reduced_params_cache):
+    """Grow-on-demand: admission commits only prompt blocks, decode growth
+    exhausts a tight pool, a decode-side preemption fires automatically,
+    and after requeue generation is token-for-token identical to the
+    unpressured run."""
+    cfg, params = reduced_params_cache("yi-9b")
+    # roomy pool: 32 blocks, 3 x blocks_for(72)=5 fits, no preemption
+    calm = _serve_batch(cfg, params, max_seq=128)
+    assert calm.preempt_log == []
+    # tight pool: 12 blocks; 3 x blocks_for(60)=4 admit (grow-on-demand),
+    # but growth past the 64-token page boundary cannot fit all three
+    tight = _serve_batch(cfg, params, max_seq=48)
+    assert tight.preempt_log, "pool pressure must trigger decode preemption"
+    assert any(e["reason"] == "exhaustion" for e in tight.preempt_log)
+    preempted = {e["rid"] for e in tight.preempt_log}
+    assert all(tight.reqs[r].preemptions >= 1 for r in preempted)
+    for rid in calm.outputs:
+        assert tight.outputs[rid] == calm.outputs[rid], \
+            f"rid {rid} diverged under block-pool pressure"
+        assert tight.reqs[rid].done is not None
+    # every block returned to the pool once the trace drains
+    bm = tight.dstates[0].blocks
+    assert bm.n_free == bm.total_blocks and not bm.allocs
+
+
+def test_watermark_preemption_fires_before_exhaustion(reduced_params_cache):
+    """With preempt_watermark set, the automatic policy preempts while free
+    blocks remain (reason 'watermark', free_blocks > 0) instead of waiting
+    for hard exhaustion — and generation still matches the calm run."""
+    cfg, params = reduced_params_cache("yi-9b")
+    calm = _serve_batch(cfg, params, max_seq=128, n_req=2, output_len=8)
+    # 12-block pool, 2 x 4 admitted -> 4 free; watermark keeps ceil(3)
+    # blocks free, so the second grower is preempted with blocks to spare
+    tight = _serve_batch(cfg, params, max_seq=48, n_req=2, output_len=8,
+                         watermark=0.25)
+    assert any(e["reason"] == "watermark" for e in tight.preempt_log)
+    assert all(e["free_blocks"] > 0 for e in tight.preempt_log)
+    for rid in calm.outputs:
+        assert tight.outputs[rid] == calm.outputs[rid]
+
+
+def test_manual_decode_preempt_matches_oracle(reduced_params_cache):
+    """preempt() on a DECODE-phase request evicts it at the next tick,
+    recompute-requeues the generated prefix, and the final tokens still
+    match the dense reference."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = _spec()
+    rng = np.random.default_rng(17)
+    plen = 48
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+
+    def serve(preempt_at=None):
+        eng = ServingEngine(cfg, params, spec, TwoChunkPolicy(MODEL, spec),
+                            max_batch=4, max_seq=256, block_size=32)
+        req = Request(rid=0, arrival=0.0, prompt_len=plen, output_len=6)
+        eng.submit(req, prompt)
+        if preempt_at is not None:
+            eng.preempt(0, at=preempt_at)
+        return eng, eng.serve()
+
+    base_eng, base = serve()
+    tt = base_eng.reqs[0].token_times
+    mid = 0.5 * (tt[2] + tt[3])          # squarely inside the decode span
+    eng, outs = serve(preempt_at=mid)
+    assert eng.reqs[0].preemptions == 1
+    assert [e["reason"] for e in eng.preempt_log] == ["manual"]
+    assert outs[0] == base[0] == _generate(params, cfg, prompt, len(base[0]))
+    # a flag landing in the TRANSFER window (prefill done, KV in flight)
+    # is honoured at the first decode tick instead of silently dropped
+    r0 = base_eng.reqs[0]
+    eng2, outs2 = serve(
+        preempt_at=0.5 * (r0.prefill_done + r0.transfer_done))
+    assert eng2.reqs[0].preemptions == 1
+    assert [e["reason"] for e in eng2.preempt_log] == ["manual"]
+    assert outs2[0] == base[0]
+
+
 # ------------------------------------------------------- controller wiring
 def test_rate_controller_wired_into_engine(reduced_params_cache):
     """The engine feeds arrivals + chunk-boundary queue load into the
@@ -223,6 +345,37 @@ def test_paged_gather_scatter_roundtrip():
         mask[int(lengths[b])] = False
         np.testing.assert_array_equal(dense[:, b, mask],
                                       np.asarray(k[:, b, mask]))
+
+
+def test_paged_decode_attention_op_matches_dense():
+    """ops.paged_decode_attention (gather fallback) == dense decode oracle
+    on a permuted block layout, with and without a sliding window."""
+    from repro.kernels import ops
+    from repro.kernels.flash_decode import scatter_kv_prefill
+    from repro.kernels.ref import decode_attention_ref
+    rng = np.random.default_rng(9)
+    B, H, KVH, D, page, npg = 2, 4, 2, 16, 8, 3
+    S = page * npg
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    lengths = jnp.asarray([9, 23], jnp.int32)
+    pool_shape = (1, B * npg + 1, page, KVH, D)
+    kp = jnp.zeros(pool_shape, jnp.float32)
+    vp = jnp.zeros(pool_shape, jnp.float32)
+    perm = rng.permutation(B * npg)
+    bt = np.zeros((B, npg), np.int32)
+    for b in range(B):
+        bt[b] = perm[b * npg:(b + 1) * npg]
+        kp = scatter_kv_prefill(kp, jnp.asarray(bt[b]), k[None, b])
+        vp = scatter_kv_prefill(vp, jnp.asarray(bt[b]), v[None, b])
+    bt = jnp.asarray(bt)
+    for window in (None, 8):
+        got = ops.paged_decode_attention(q, kp[0], vp[0], bt, lengths,
+                                         window=window, impl="ref")
+        want = decode_attention_ref(q, k, v, lengths, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_paged_flash_decode_matches_ref():

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links.
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``) and reference definitions (``[ref]: target``), and
+checks that each *relative* target resolves to a file or directory in the
+repository (fragment suffixes like ``#section`` are stripped; external
+``http(s)://`` / ``mailto:`` targets and pure in-page ``#anchors`` are
+ignored).  No dependencies — runs on a bare Python in the CI docs job:
+
+    python tools/check_markdown_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".jax_cache", "__pycache__", ".github"}
+INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.relative_to(ROOT).parts):
+            yield p
+
+
+def targets_in(text: str):
+    # fenced code blocks routinely contain [x](y)-shaped non-links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    text = re.sub(r"`[^`\n]*`", "", text)
+    for m in INLINE.finditer(text):
+        yield m.group(1)
+    for m in REFDEF.finditer(text):
+        yield m.group(1)
+
+
+def main() -> int:
+    broken = []
+    n_checked = 0
+    for md in md_files():
+        for target in targets_in(md.read_text(encoding="utf-8")):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n_checked += 1
+            # leading "/" means repo-root-relative (pathlib would otherwise
+            # discard ROOT entirely for absolute-looking paths)
+            resolved = (ROOT / path.lstrip("/") if path.startswith("/")
+                        else md.parent / path)
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(ROOT)}: {target}")
+    if broken:
+        print(f"{len(broken)} broken intra-repo markdown link(s):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"ok: {n_checked} intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
