@@ -10,6 +10,11 @@ through the natively-paged KV path.  A second segment squeezes the same
 trace through a deliberately tight block pool to exercise grow-on-demand
 allocation and decode-side preemption, reporting the preemption count and
 that every request still completes (token-for-token vs the roomy run).
+A third segment serves a shared-prefix workload twice (prefix sharing
+on/off) and reports the prefix-hit rate, peak blocks in use and output
+equality; a fourth micro-benchmarks the donated page-scatter helpers
+(the per-tick pool-update cost that ``donate_argnums`` keeps from
+functionally rebuilding the pool arrays).
 
 CI runs this via ``run.py --quick --only engine_fidelity --json ...`` and
 uploads the JSON so the BENCH_* trajectory accumulates per commit.
@@ -86,6 +91,83 @@ def run(quick: bool = False):
     print(f"tight pool: {n_pre} decode preemptions in {tight_wall:.1f}s | "
           f"outputs match roomy run: {conserved} | "
           f"pool drained clean: {bm.n_free == bm.total_blocks}")
+
+    # --- shared-prefix workload: prefix-hit rate + peak blocks in use
+    import numpy as np
+
+    from repro.core.chunk_planner import Allocation, Chunk
+    from repro.serving.request import Request
+    from repro.serving.simulator import Policy
+
+    class _ParallelPolicy(Policy):
+        """One instance per request so arrivals overlap residents — the
+        window in which prefix-sharing admission fires."""
+        name = "bench_parallel"
+
+        def plan(self, req, pool, now):
+            base = req.rid % self.spec.n_prefill
+            t_p = self.model.latency(1, 0, req.prompt_len)
+            return Allocation([Chunk(req.prompt_len, (base,), pool[base],
+                                     pool[base] + t_p)])
+
+    rng = np.random.default_rng(7)
+    n_share = 4 if quick else 8
+    common = rng.integers(0, cfg.vocab_size, 96)
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, 24)]).astype(np.int32)
+        for _ in range(n_share)]
+
+    def serve_shared(sharing: bool):
+        spec2 = ClusterSpec(n_prefill=16, n_decode=1,
+                            sp_candidates=(1, 2, 4, 8))
+        e = ServingEngine(cfg, params, spec2,
+                          _ParallelPolicy(table1_model(), spec2),
+                          max_batch=8, max_seq=256, block_size=16,
+                          prefix_sharing=sharing)
+        for i, p in enumerate(prompts):
+            e.submit(Request(rid=i, arrival=i * 0.005, prompt_len=len(p),
+                             output_len=8), p)
+        t0 = time.perf_counter()
+        out = e.serve()
+        return e, out, time.perf_counter() - t0
+
+    sh, sh_out, sh_wall = serve_shared(True)
+    un, un_out, _ = serve_shared(False)
+    st = sh.dstates[0].blocks.stats
+    hit = st["shared"] / max(st["shared"] + st["fresh"], 1)
+    peak, peak_un = (sh.dstates[0].blocks.peak_in_use,
+                     un.dstates[0].blocks.peak_in_use)
+    sh_match = all(sh_out[r] == un_out[r] for r in un_out)
+    print(f"shared-prefix x{n_share}: hit rate {hit:.2f} "
+          f"({st['shared']} shared / {st['fresh']} fresh, cow {st['cow']}) "
+          f"| peak blocks {peak} vs {peak_un} unshared | "
+          f"outputs match unshared: {sh_match}")
+
+    # --- donated page-write micro-benchmark: per-tick pool update cost.
+    # scatter_kv_token/scatter_kv_chunk/copy_kv_blocks donate their pool
+    # argument, so XLA aliases the buffer in place instead of rebuilding
+    # the whole pool array on every decode tick (ROADMAP open item).
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import scatter_kv_token
+    pool = jnp.zeros((cfg.n_blocks, 129, 16, cfg.n_kv_heads,
+                      cfg.head_dim_), jnp.dtype(cfg.dtype))
+    pool_mb = pool.nbytes / 2 ** 20
+    bt2 = jnp.zeros((8, 4), jnp.int32)
+    lens = jnp.arange(8, dtype=jnp.int32) % 64
+    new = jnp.ones((cfg.n_blocks, 8, cfg.n_kv_heads, cfg.head_dim_),
+                   pool.dtype)
+    pool = jax.block_until_ready(scatter_kv_token(pool, bt2, lens, new))
+    n_it = 50 if quick else 200
+    t0 = time.perf_counter()
+    for _ in range(n_it):
+        pool = scatter_kv_token(pool, bt2, lens, new)
+    jax.block_until_ready(pool)
+    scat_us = (time.perf_counter() - t0) / n_it * 1e6
+    print(f"donated page scatter: {scat_us:.0f} us/call on a "
+          f"{pool_mb:.1f} MB pool (donate_argnums: in-place alias, no "
+          f"functional rebuild per tick)")
     return [
         fmt_row("engine.chunk_start_drift_s", wall * 1e6 / max(n_toks, 1),
                 f"{drift:.3e}"),
@@ -94,6 +176,10 @@ def run(quick: bool = False):
         fmt_row("engine.decode_preemptions",
                 tight_wall * 1e6 / max(n_toks, 1),
                 f"{n_pre}|match={int(conserved)}"),
+        fmt_row("engine.prefix_hit_rate", sh_wall * 1e6 / max(n_share, 1),
+                f"{hit:.2f}|peak={peak}/{peak_un}|cow={st['cow']}"
+                f"|match={int(sh_match)}"),
+        fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
     ]
 
 

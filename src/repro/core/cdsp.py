@@ -78,6 +78,100 @@ def prefill_chunk(params: dict, cfg: ModelConfig, ctx: ExecContext,
     return logits, _append_history(cfg, history, new_caches, positions)
 
 
+def aux_history_from_caches(cfg: ModelConfig, prev_aux: Optional[dict],
+                            new_caches: dict) -> Optional[dict]:
+    """Fold one chunk's non-attention state into the running aux history.
+
+    The paged prefill path keeps attention KV in pages (PagedKVCache) and
+    only the O(1)-in-sequence state — SSD states, conv windows, cross-attn
+    KV — as a small per-request tree.  Non-attention ``self`` entries are
+    replace-semantics (the chunk's final state supersedes the previous
+    one); ``cross`` entries are computed once and carried through."""
+    out: dict = {}
+    for i, spec in enumerate(cfg.pattern):
+        key = str(i)
+        ent = {}
+        if spec.mixer != "attn":
+            nc = new_caches[key].get("self")
+            if nc is not None:
+                ent["self"] = nc
+        if "cross" in new_caches[key]:
+            ent["cross"] = new_caches[key]["cross"]
+        elif prev_aux is not None and "cross" in prev_aux.get(key, {}):
+            ent["cross"] = prev_aux[key]["cross"]
+        if ent:
+            out[key] = ent
+    return out or None
+
+
+def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
+                       hist_len, aux_history: Optional[dict] = None,
+                       ) -> Optional[dict]:
+    """Build a ``forward(history=...)`` tree whose attention entries read
+    the cross-chunk KV straight out of PagedKVCache pools.
+
+    ``pools`` is PagedKVCache.pools (pattern position -> {"k","v"} arrays
+    of shape (nb, n_pages, page, KVH, D)); ``block_table`` lists the
+    request's physical pages covering its first ``hist_len`` tokens in
+    natural order; non-attention state rides along from ``aux_history``.
+    Every leaf carries the leading n_blocks axis so the transformer's
+    layer scan can slice one page-set per block — the per-layer slice is
+    exactly the {"k_pool","v_pool","block_table","len"} paged history
+    consumed by models/attention.py (ops.paged_prefill_attention).
+    """
+    out: dict = {}
+    bt_b = ln_b = None
+    nb = cfg.n_blocks
+    for i, spec in enumerate(cfg.pattern):
+        key = str(i)
+        ent: dict = {}
+        if spec.mixer == "attn":
+            if bt_b is None:
+                bt = jnp.asarray(block_table, jnp.int32)
+                if bt.ndim == 1:
+                    bt = bt[None]                       # (B=1, npg)
+                ln = jnp.asarray(hist_len, jnp.int32).reshape(-1)
+                ln = jnp.broadcast_to(ln, (bt.shape[0],))
+                bt_b = jnp.broadcast_to(bt[None], (nb,) + bt.shape)
+                ln_b = jnp.broadcast_to(ln[None], (nb,) + ln.shape)
+            p = pools[key]
+            ent["self"] = {"k_pool": p["k"], "v_pool": p["v"],
+                           "block_table": bt_b, "len": ln_b}
+        elif aux_history is not None and "self" in aux_history.get(key, {}):
+            ent["self"] = aux_history[key]["self"]
+        if aux_history is not None and "cross" in aux_history.get(key, {}):
+            ent["cross"] = aux_history[key]["cross"]
+        if ent:
+            out[key] = ent
+    return out or None
+
+
+def prefill_chunk_paged(params: dict, cfg: ModelConfig, ctx: ExecContext,
+                        tokens: jax.Array, positions: jax.Array,
+                        pools: dict, block_table, hist_len: int,
+                        aux_history: Optional[dict] = None,
+                        encoder_frames: Optional[jax.Array] = None,
+                        ) -> Tuple[jax.Array, dict, Optional[dict]]:
+    """Run ONE CDSP chunk whose cross-chunk history lives in KV pages.
+
+    The pages-all-the-way-down sibling of ``prefill_chunk``: instead of
+    concatenating a dense history tree, the chunk attends to previous
+    chunks through ``pages_history_view``; the caller then scatters the
+    returned chunk KV into pages (``PagedKVCache.write_chunk``) before the
+    next chunk runs.  Returns (next-token logits (B, 1, V), the chunk's
+    new caches — attention entries hold only THIS chunk's KV — and the
+    updated aux history)."""
+    history = None
+    if hist_len > 0 or aux_history is not None:
+        history = pages_history_view(cfg, pools, block_table, hist_len,
+                                     aux_history)
+    logits, _, new_caches = forward(
+        params, cfg, ctx, tokens, positions, "prefill",
+        history=history, encoder_frames=encoder_frames)
+    return logits, new_caches, aux_history_from_caches(cfg, aux_history,
+                                                       new_caches)
+
+
 def chunked_prefill(params: dict, cfg: ModelConfig, ctx: ExecContext,
                     tokens: jax.Array, positions: jax.Array,
                     chunk_lens: List[int],

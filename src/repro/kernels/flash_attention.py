@@ -144,3 +144,141 @@ def flash_attention(
     if with_lse:
         return out, lse
     return out
+
+
+def _paged_prefill_kernel(bt_ref, len_ref, qpos_ref, q_ref, k_ref, v_ref,
+                          o_ref, lse_ref, acc_scr, m_scr, l_scr,
+                          *, scale: float, nk: int, page: int, group: int,
+                          causal: bool, window: Optional[int]):
+    b = pl.program_id(0)
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    length = len_ref[b]
+    # history pages hold KV in natural token order, so the logical position
+    # is the flat table index (the physical indirection happened in the
+    # BlockSpec index map) and validity is simply idx < hist_len
+    kv_pos = ik * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    q_pos = qpos_ref[0]                                      # (Sq,)
+    valid = jnp.broadcast_to(kv_pos[None, :] < length,
+                             (q_pos.shape[0], page))
+    if causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale             # (Sq, H, D)
+        k = k_ref[0].astype(jnp.float32)                     # (page, KVH, D)
+        v = v_ref[0].astype(jnp.float32)
+        KVH = k.shape[1]
+        Sq, H, D = q.shape
+        # batched over kv heads: (KVH, Sq*group, page); head index is
+        # kvh * group + g, matching q.reshape(Sq, KVH, group, D)
+        qg = q.reshape(Sq, KVH, group, D).transpose(1, 0, 2, 3) \
+              .reshape(KVH, Sq * group, D)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 0, 2), (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        s = s.reshape(KVH, Sq, group, page).transpose(1, 0, 2, 3) \
+             .reshape(Sq, H, page)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m_prev = m_scr[...]                                  # (Sq, H)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, :, None])
+        p = jnp.where(valid[:, None, :], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        pg = p.reshape(Sq, KVH, group, page).transpose(1, 0, 2, 3) \
+              .reshape(KVH, Sq * group, page)
+        pv = jax.lax.dot_general(
+            pg, v.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (KVH, Sq*g, D)
+        pv = pv.reshape(KVH, Sq, group, D).transpose(1, 0, 2, 3) \
+               .reshape(Sq, H, D)
+        acc_scr[...] = acc_scr[...] * alpha[:, :, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l[:, :, None]).astype(o_ref.dtype)
+        lse = jnp.where(l > 0.0, m_scr[...] + jnp.log(safe_l), NEG_INF)
+        lse_ref[0] = lse.T.astype(lse_ref.dtype)             # (H, Sq)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softmax_scale", "interpret"))
+def paged_flash_prefill(
+    q: jax.Array,                      # (B, Sq, H, D) — chunk queries
+    k_pool: jax.Array,                 # (n_pages, page, KVH, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,           # (B, pages_per_seq) int32
+    hist_len: jax.Array,               # (B,) int32 — valid history tokens
+    q_pos: jax.Array,                  # (B, Sq) int32
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Partial flash attention of a prefill chunk over paged history KV.
+
+    The gather-from-block-table variant of the prefill flash kernel: the
+    page table rides in as a scalar-prefetch argument and the KV BlockSpec
+    index map dereferences it, so each (b, ik) grid step DMAs physical page
+    ``block_tables[b, ik]`` straight from the pool.  History tokens are in
+    natural order (position == flat index).  Returns ``(out, lse)`` —
+    normalised within the history shard — for ``ref.merge_partials`` with
+    the chunk's own causal self-attention (see ops.paged_prefill_attention).
+    """
+    B, Sq, H, D = q.shape
+    _, page, KVH, _ = k_pool.shape
+    nk = block_tables.shape[1]
+    group = H // KVH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale, nk=nk,
+                               page=page, group=group, causal=causal,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,         # block_tables, hist_len
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, Sq), lambda b, ik, bt, ln: (b, 0)),
+            pl.BlockSpec((1, Sq, H, D), lambda b, ik, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, KVH, D),
+                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+            pl.BlockSpec((1, page, KVH, D),
+                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Sq, H, D), lambda b, ik, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, H, Sq), lambda b, ik, bt, ln: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Sq, H, D), jnp.float32),
+            pltpu.VMEM((Sq, H), jnp.float32),
+            pltpu.VMEM((Sq, H), jnp.float32),
+        ],
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, hist_len, q_pos, q, k_pool, v_pool)
+    return out, lse

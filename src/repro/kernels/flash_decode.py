@@ -22,13 +22,23 @@ Paged variants for the serving engine's block-table KV layout
   ``ops.paged_decode_attention``, which the model's decode attention uses
   natively (models/attention.py); on CPU the gather fallback in
   ``kernels/ref.paged_decode_attention_ref`` takes over.
-* ``scatter_kv_prefill`` — jitted XLA scatter that writes a request's
-  prefilled KV into its pages at admission (the production write path,
-  via PagedKVCache.write_prefill).  ``scatter_kv_token`` and
-  ``gather_kv_pages`` are validation/debug helpers only: the per-step
-  token append happens inline in the model's paged decode branch
-  (models/attention.py), which scatters into the pool and attends off it
-  without ever materialising the dense view.
+* ``scatter_kv_chunk`` — jitted XLA scatter that writes one prefill
+  chunk's KV into pages at its *logical positions* (the production write
+  path, via PagedKVCache.write_chunk: each CDSP chunk lands in pages the
+  moment it completes — there is no dense per-request KV at any point).
+  ``scatter_kv_prefill`` is the whole-sequence special case.
+* ``copy_kv_blocks`` / ``copy_kv_block_within`` — page-granular block
+  copies: prefill-pool -> decode-pool admission handoff, and the
+  copy-on-write split of a shared block (serving/cache_manager.py).
+* ``scatter_kv_token`` and ``gather_kv_pages`` are validation/debug
+  helpers only: the per-step token append happens inline in the model's
+  paged decode branch (models/attention.py), which scatters into the pool
+  and attends off it without ever materialising the dense view.
+
+All pool-writing helpers donate their pool argument (``donate_argnums``):
+the caller rebinds the result over the input, so XLA updates the pool
+buffers in place instead of functionally rebuilding the (large) arrays on
+every write — do NOT keep references to a pool you pass in.
 
 Validated against kernels/ref.decode_attention_ref in interpret mode
 (tests/test_kernels.py, tests/test_paged_engine.py).
@@ -172,7 +182,7 @@ def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     return g.reshape(nb, B, npg * pool.shape[2], *pool.shape[3:])
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def scatter_kv_token(pool: jax.Array, block_table: jax.Array,
                      lengths: jax.Array, new: jax.Array) -> jax.Array:
     """Write one token per sequence at logical position ``lengths[b]``
@@ -189,19 +199,58 @@ def scatter_kv_token(pool: jax.Array, block_table: jax.Array,
         new.astype(pool.dtype))
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_kv_chunk(pool: jax.Array, blocks: jax.Array,
+                     seq_kv: jax.Array, positions: jax.Array) -> jax.Array:
+    """Scatter one chunk's KV into pages at its logical positions.
+
+    blocks: (pages_per_seq,) physical ids covering the whole allocation;
+    seq_kv: (nb, L, KVH, D); positions: (L,) int32 logical token positions
+    — token j lands in page ``blocks[positions[j] // page]`` at slot
+    ``positions[j] % page``.  Scattering by *position* (not storage index)
+    keeps pages in natural token order even when the chunk's storage order
+    is permuted (zigzag ring layouts).  The pool argument is donated.
+    """
+    page = pool.shape[2]
+    pos = positions.astype(jnp.int32)
+    return pool.at[:, blocks[pos // page], pos % page].set(
+        seq_kv.astype(pool.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def scatter_kv_prefill(pool: jax.Array, blocks: jax.Array,
                        seq_kv: jax.Array) -> jax.Array:
     """Scatter a whole prefilled sequence into its pages.
 
     blocks: (pages_per_seq,) physical ids; seq_kv: (nb, S, KVH, D) with
     S <= pages_per_seq * page, token i lands in page blocks[i // page].
+    The pool argument is donated.
     """
     page = pool.shape[2]
     S = seq_kv.shape[1]
     pos = jnp.arange(S, dtype=jnp.int32)
     return pool.at[:, blocks[pos // page], pos % page].set(
         seq_kv.astype(pool.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_kv_blocks(dst_pool: jax.Array, src_pool: jax.Array,
+                   src_blocks: jax.Array, dst_blocks: jax.Array) -> jax.Array:
+    """Copy whole physical pages between two pools (prefill -> decode
+    admission handoff).  Page-granular: no dense per-request view is ever
+    assembled.  The destination pool is donated; the source is read-only.
+    """
+    return dst_pool.at[:, dst_blocks].set(
+        src_pool[:, src_blocks].astype(dst_pool.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_kv_block_within(pool: jax.Array, src_block: jax.Array,
+                         dst_block: jax.Array) -> jax.Array:
+    """Copy one page to another within the same pool — the physical half
+    of a copy-on-write split (serving/cache_manager.BlockManager).  The
+    pool argument is donated."""
+    return pool.at[:, dst_block].set(pool[:, src_block])
 
 
 def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,

@@ -16,6 +16,8 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_attention import (
+    paged_flash_prefill as _paged_flash_prefill)
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.flash_decode import paged_flash_decode as _paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
@@ -88,6 +90,44 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                                window=window, softmax_scale=softmax_scale,
                                with_lse=with_lse,
                                interpret=(impl == "interpret"))
+
+
+def paged_prefill_attention(q, k_new, v_new, q_pos, kv_pos_new,
+                            k_pool, v_pool, block_tables, hist_len, *,
+                            causal: bool = True,
+                            window: Optional[int] = None,
+                            softmax_scale=None, impl: Optional[str] = None):
+    """Prefill-chunk attention with paged cross-chunk history.
+
+    The CDSP chunk's queries attend over [history pages ++ own chunk KV]
+    without a dense history view: history KV sits in a block pool in
+    natural token order (pages written per chunk by
+    ``PagedKVCache.write_chunk``), addressed through ``block_tables``
+    (B, pages_per_seq) with per-row validity ``hist_len``.
+
+    On TPU (``impl="pallas"``) this composes the scalar-prefetch kernel
+    ``flash_attention.paged_flash_prefill`` (history shard) with the plain
+    flash kernel over the chunk's own KV, merged via ``ref.merge_partials``
+    — numerically the single-softmax result.  On CPU (``impl="ref"``) the
+    gather fallback ``ref.paged_prefill_attention_ref`` runs instead;
+    ``impl="interpret"`` pushes both Pallas kernel bodies through the
+    interpreter for validation.
+    """
+    impl = impl or default_impl()
+    if impl in ("ref", "ref_blocked"):
+        return _ref.paged_prefill_attention_ref(
+            q, k_new, v_new, q_pos, kv_pos_new, k_pool, v_pool,
+            block_tables, hist_len, causal=causal, window=window,
+            softmax_scale=softmax_scale)
+    interpret = impl == "interpret"
+    o_h, lse_h = _paged_flash_prefill(
+        q, k_pool, v_pool, block_tables, hist_len, q_pos, causal=causal,
+        window=window, softmax_scale=softmax_scale, interpret=interpret)
+    o_s, lse_s = _flash_attention(
+        q, k_new, v_new, q_pos, kv_pos_new, causal=causal, window=window,
+        softmax_scale=softmax_scale, with_lse=True, interpret=interpret)
+    out, _ = _ref.merge_partials([o_h, o_s], [lse_h, lse_s])
+    return out
 
 
 def ssd(x, dt, A, Bm, Cm, *, h0=None, chunk: int = 128,

@@ -196,6 +196,51 @@ def paged_decode_attention_ref(
                                 with_lse=with_lse)
 
 
+def paged_prefill_attention_ref(
+    q: jax.Array,                      # (B, Sq, H, D) — current chunk queries
+    k_new: jax.Array,                  # (B, Sq, KVH, D) — current chunk K
+    v_new: jax.Array,                  # (B, Sq, KVH, D)
+    q_pos: jax.Array,                  # (Sq,) or (B, Sq) int32
+    kv_pos_new: jax.Array,             # (Sq,) or (B, Sq) int32
+    k_pool: jax.Array,                 # (n_pages, page, KVH, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,           # (B, pages_per_seq) int32 page ids
+    hist_len: jax.Array,               # (B,) int32 — valid history tokens
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+):
+    """CDSP chunk prefill attending to paged cross-chunk history.
+
+    The chunk's queries attend over [history pages ++ own chunk K/V]:
+    history KV lives in a block pool in *natural token order* (the engine
+    scatters each chunk's KV into pages by logical position), so history
+    positions are simply the flat table index and validity is
+    ``idx < hist_len``.  Pure-JAX gather fallback — the CPU/non-Pallas
+    execution path behind ``ops.paged_prefill_attention``; on TPU the
+    scalar-prefetch kernel ``flash_attention.paged_flash_prefill`` +
+    ``merge_partials`` skips the dense materialisation.
+    """
+    B, Sq = q.shape[:2]
+    npg = block_tables.shape[1]
+    page = k_pool.shape[1]
+    hk = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
+    hv = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
+    hist_pos = jnp.arange(npg * page, dtype=jnp.int32)
+    k = jnp.concatenate([hk.astype(k_new.dtype), k_new], axis=1)
+    v = jnp.concatenate([hv.astype(v_new.dtype), v_new], axis=1)
+    kv_pos = jnp.concatenate(
+        [jnp.broadcast_to(hist_pos[None], (B, npg * page)),
+         _broadcast_pos(kv_pos_new, B)], axis=1)
+    kv_valid = jnp.concatenate(
+        [hist_pos[None, :] < hist_len[:, None],
+         jnp.ones((B, Sq), bool)], axis=1)
+    return attention_ref(q, k, v, q_pos, kv_pos, causal=causal,
+                         window=window, kv_valid=kv_valid,
+                         softmax_scale=softmax_scale)
+
+
 # ------------------------------------------------------------------ mamba-2
 def ssd_ref(x: jax.Array,              # (B, S, H, P)  — per-head inputs
             dt: jax.Array,             # (B, S, H)     — softplus'd step sizes

@@ -72,9 +72,14 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         new token's K/V is scattered into its page and attention runs
         straight off the pool (Pallas scalar-prefetch kernel on TPU,
         gather fallback elsewhere) — no dense (B, max_seq) view exists.
-    history (CDSP chunked prefill): {"k","v","pos"} — previous chunks' KV,
-    already re-balanced (evenly re-sharded) over the current chunk's group;
-    position-array masking makes the cross-chunk causal mask automatic.
+    history (CDSP chunked prefill), two layouts:
+      * dense — {"k","v","pos"}: previous chunks' KV, already re-balanced
+        (evenly re-sharded) over the current chunk's group; position-array
+        masking makes the cross-chunk causal mask automatic.
+      * paged — {"k_pool","v_pool","block_table","len"}: previous chunks'
+        KV in physical pages in natural token order (the serving engine's
+        prefill-direct-to-pages path, core/cdsp.pages_history_view); the
+        chunk attends through the table via ops.paged_prefill_attention.
     """
     B, S, _ = x.shape
     q, k, v = qkv_proj(x, p, cfg, prefix)
@@ -95,9 +100,15 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
             # kv_split_axis does not exist yet (ROADMAP); fail loudly
             # rather than silently replicating the whole pool per device
             raise NotImplementedError(
-                "paged decode with ctx.kv_split_axis is not supported yet: "
-                "pools are per-instance; drop kv_split_axis or use dense "
-                "caches")
+                "paged block-table decode cannot be combined with split-KV "
+                f"decode (ExecContext.kv_split_axis={ctx.kv_split_axis!r} "
+                f"on mesh axes {tuple(ctx.mesh.axis_names)}): the paged "
+                "pool is per decode instance and a shard_map island that "
+                "splits it over the KV axis does not exist yet (ROADMAP). "
+                "Either run the paged engine with "
+                "ctx.with_(kv_split_axis=None) — tensor/data parallelism "
+                "still apply — or pass dense {'k','v'} decode caches "
+                "(no 'block_table' entry) to keep split-KV decode.")
         qd = q[:, 0]                                         # (B, H, D)
         bt = cache["block_table"]                            # (B, npg) int32
         k_pool, v_pool = cache["k"], cache["v"]
@@ -201,6 +212,26 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
 
     k_self, v_self = k, v
     kv_pos = pos2d
+    if history is not None and "block_table" in history:
+        # paged cross-chunk history (CDSP prefill-direct-to-pages): the
+        # previous chunks' KV lives in physical pages in natural token
+        # order; attend over [pages ++ own chunk] through the block table
+        # without ever gathering a dense history view (Pallas
+        # paged_flash_prefill + merge on TPU, gather fallback elsewhere).
+        if ctx.sp_axis is not None and ctx.mesh is not None:
+            raise NotImplementedError(
+                "paged cross-chunk prefill history does not compose with "
+                f"ring attention (ExecContext.sp_axis={ctx.sp_axis!r}): "
+                "the page pool is engine-local.  Run prefill chunks with "
+                "ctx.with_(sp_axis=None) or hand the history over as the "
+                "dense {'k','v','pos'} tree (core/cdsp._append_history).")
+        o = ops.paged_prefill_attention(
+            q, k, v, pos2d, pos2d, history["k_pool"], history["v_pool"],
+            history["block_table"], history["len"], causal=causal,
+            window=window, impl=ctx.impl)
+        out = out_proj(o, p, prefix)
+        return out, ({"k": k_self, "v": v_self} if mode == "prefill"
+                     else None)
     if history is not None:
         dtype = k.dtype
         k = jnp.concatenate([history["k"].astype(dtype), k], axis=1)

@@ -1,9 +1,20 @@
 """Paged KV cache: block-table accounting + physical paged storage.
 
-``BlockManager`` tracks physical cache blocks per decode instance plus
-Llumnix-style "virtual usage": slots reserved for requests whose KV is
-still in flight from the prefill pool (Sec. 5.2).  The freeness rate used
-by the decode router is (free - virtual) / active_batch.
+Pages all the way down: the block pool is the ONLY representation of
+attention KV across the whole request lifecycle.  Prefill chunks scatter
+their KV into pages the moment they complete (``PagedKVCache.write_chunk``,
+driven per chunk by the serving engine), cross-chunk CDSP history is read
+back out of pages (ops.paged_prefill_attention), admission hands pages from
+the prefill pool to a decode pool with page-granular copies
+(``copy_from``), and decode attends through block tables natively.  No
+dense per-request ``(B, L)`` KV tree exists at any point — the doubling of
+peak memory at admission that the old ``history_to_decode_caches`` path
+paid is gone.
+
+``BlockManager`` tracks physical cache blocks per pool plus Llumnix-style
+"virtual usage": slots reserved for requests whose KV is still in flight
+from the prefill pool (Sec. 5.2).  The freeness rate used by the decode
+router is (free - virtual) / active_batch.
 
 Allocation is **grow-on-demand**: admission commits only the blocks that
 the request's *prefilled* KV actually occupies (``reserve_virtual`` +
@@ -14,33 +25,64 @@ point of paged KV (vLLM / Infinite-LLM's DistAttention).  When ``extend``
 cannot be satisfied the engine preempts a victim request (recompute-style
 decode preemption, see serving/engine.py) instead of over-committing.
 
+**Prefix sharing + copy-on-write** (vLLM-style capacity multiplier):
+every block carries a refcount; full blocks of admitted requests are
+published under a *chained content hash* of their token ids
+(``block_hashes``/``register_hashes``).  At admission the engine matches
+the longest hashed prefix across residents (``match_prefix``) and commits
+with ``shared=`` blocks — those blocks are referenced, not copied.  A
+write into a block referenced by more than one request (a partial-block
+append) must first go through ``ensure_writable``, which splits the block
+copy-on-write; ``release`` decrements refs and returns only the blocks
+that actually died.  ``peak_in_use`` and ``stats`` (fresh/shared/cow
+counters) feed the benchmarks' prefix-hit-rate reporting.
+
 ``PagedKVCache`` is the physical side: per attention layer a block pool of
 shape (n_blocks, total_blocks + 1, block_size, KVH, D) indexed through the
 BlockManager's per-request block lists (Infinite-LLM-style distributed
-paged layout, one pool per decode instance).  Prefilled KV is scattered
-into pages at admission (``write_prefill``); during decode the model's
-attention consumes the pools natively through block tables
-(models/attention.py + ops.paged_decode_attention) and returns the
-functionally-updated pools, which ``adopt`` folds back.  Block id
-``total_blocks`` is a scratch page: padded batch rows write there so
-inactive rows can never corrupt live pages.
+paged layout, one pool per instance).  Block id ``total_blocks`` is a
+scratch page: padded batch rows write there so inactive rows can never
+corrupt live pages.  All pool writes go through donated jitted helpers
+(kernels/flash_decode.py) so XLA updates pool buffers in place.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def block_hashes(tokens: np.ndarray, block_size: int) -> List[int]:
+    """Chained content hashes of the FULL blocks of a token sequence.
+
+    Hash i covers tokens [0, (i+1) * block_size) by chaining on hash i-1,
+    so equal hash => equal token *prefix* (up to collisions) — exactly the
+    condition under which causal KV is reusable across requests.  Partial
+    trailing blocks get no hash (their content is still mutable)."""
+    out: List[int] = []
+    h = 0
+    for i in range(len(tokens) // block_size):
+        blk = tokens[i * block_size:(i + 1) * block_size]
+        h = hash((h,) + tuple(int(t) for t in blk))
+        out.append(h)
+    return out
 
 
 @dataclass
 class BlockManager:
-    """Block accounting for one decode instance.
+    """Block accounting for one KV pool (a decode instance, or the
+    engine-wide prefill pool).
 
     ``total_blocks`` physical blocks of ``block_size`` tokens each.
     ``allocs`` maps rid -> list of physical block ids (grown in place by
-    ``extend``); ``virtual_tokens`` maps rid -> tokens reserved while the
-    request's KV is still in flight (counted against admission via
-    ``can_fit``/``freeness`` but not yet backed by physical blocks).
+    ``extend``); a block may appear in several requests' lists when it is
+    prefix-shared — ``ref`` counts the holders.  ``virtual_tokens`` maps
+    rid -> tokens reserved while the request's KV is still in flight
+    (counted against admission via ``can_fit``/``freeness`` but not yet
+    backed by physical blocks); under prefix sharing the engine reserves
+    only the tokens that need *fresh* blocks.
     """
 
     total_blocks: int
@@ -48,6 +90,12 @@ class BlockManager:
     free_blocks: Optional[List[int]] = None
     allocs: Dict[int, List[int]] = field(default_factory=dict)
     virtual_tokens: Dict[int, int] = field(default_factory=dict)
+    ref: Dict[int, int] = field(default_factory=dict)        # block -> holders
+    hash_of: Dict[int, int] = field(default_factory=dict)    # block -> hash
+    by_hash: Dict[int, int] = field(default_factory=dict)    # hash -> block
+    peak_in_use: int = 0
+    stats: Dict[str, int] = field(default_factory=lambda: {
+        "fresh": 0, "shared": 0, "cow": 0})
 
     def __post_init__(self):
         if self.free_blocks is None:
@@ -81,46 +129,135 @@ class BlockManager:
         return max(0, self.blocks_for(n_tokens) - len(self.allocs[rid]))
 
     # ----------------------------------------------------------- lifecycle
+    def _take(self, n: int) -> List[int]:
+        """Pop ``n`` fresh blocks off the free list (refcount 1 each)."""
+        assert n <= self.n_free, "accounting violated"
+        blocks = [self.free_blocks.pop() for _ in range(n)]
+        for b in blocks:
+            self.ref[b] = 1
+        self.stats["fresh"] += n
+        self.peak_in_use = max(self.peak_in_use,
+                               self.total_blocks - self.n_free)
+        return blocks
+
+    def open(self, rid: int) -> None:
+        """Start an empty allocation (the prefill pool grows it per chunk
+        via ``extend``; no virtual reservation involved)."""
+        self.allocs.setdefault(rid, [])
+
     def reserve_virtual(self, rid: int, n_tokens: int) -> bool:
         """Reserve capacity for an in-flight transfer; False if it cannot
         fit (the caller retries later).  A failed reserve leaves no entry
-        behind.  Under grow-on-demand the engine reserves only the tokens
-        whose KV is actually landing (the prefilled length), not the
-        request's full prompt+output budget."""
+        behind.  The engine reserves only the tokens whose KV actually
+        needs fresh blocks: the prefilled length minus any prefix-shared
+        blocks (grow-on-demand covers the output side)."""
         if not self.can_fit(n_tokens):
             return False
         self.virtual_tokens[rid] = n_tokens
         return True
 
-    def commit(self, rid: int) -> List[int]:
+    def commit(self, rid: int, shared: Sequence[int] = ()) -> List[int]:
         """Virtual reservation -> physical blocks (transfer complete).
 
-        The engine calls reserve_virtual and commit within one event, so
-        decode-side ``extend`` can never race a pending reservation."""
+        ``shared`` is a prefix of already-resident blocks discovered by
+        ``match_prefix``/the engine's token compare: they are referenced
+        (refcount + 1), not copied, and the fresh remainder — sized by the
+        reservation — is popped off the free list.  The engine calls
+        reserve_virtual and commit within one event, so decode-side
+        ``extend`` can never race a pending reservation."""
         n = self.virtual_tokens.pop(rid)
-        need = self.blocks_for(n)
-        assert need <= self.n_free, "accounting violated"
-        blocks = [self.free_blocks.pop() for _ in range(need)]
+        for b in shared:
+            self.ref[b] += 1
+        self.stats["shared"] += len(shared)
+        blocks = list(shared) + self._take(self.blocks_for(n))
         self.allocs[rid] = blocks
         return blocks
 
     def extend(self, rid: int, n_tokens: int) -> bool:
         """Grow ``rid``'s allocation to cover ``n_tokens`` (decode appends
-        crossing a page boundary).  Mutates the allocation list in place —
-        holders of the list (the engine's per-request metadata) observe the
-        growth.  False if the pool is exhausted; the engine then preempts."""
+        crossing a page boundary, or the prefill pool absorbing the next
+        chunk).  Mutates the allocation list in place — holders of the
+        list (the engine's per-request metadata) observe the growth.
+        False if the pool is exhausted; the engine then preempts."""
         need = self.blocks_for(n_tokens) - len(self.allocs[rid])
         if need <= 0:
             return True
         if need > self.n_free:
             return False
-        self.allocs[rid] += [self.free_blocks.pop() for _ in range(need)]
+        self.allocs[rid] += self._take(need)
         return True
 
-    def release(self, rid: int) -> None:
-        """Return all of ``rid``'s blocks (and any virtual reservation)."""
-        self.free_blocks += self.allocs.pop(rid, [])
+    def release(self, rid: int) -> List[int]:
+        """Drop ``rid``'s references (and any virtual reservation).
+
+        Returns the blocks that actually went back to the free list —
+        blocks still referenced by a prefix-sharing sibling survive, along
+        with their published hashes.  A dead block's hash entries are
+        retired with it (sharing happens across *resident* requests only).
+        """
+        freed: List[int] = []
+        for b in self.allocs.pop(rid, []):
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                del self.ref[b]
+                h = self.hash_of.pop(b, None)
+                if h is not None and self.by_hash.get(h) == b:
+                    del self.by_hash[h]
+                self.free_blocks.append(b)
+                freed.append(b)
         self.virtual_tokens.pop(rid, None)
+        return freed
+
+    # ------------------------------------------------- prefix sharing / CoW
+    def register_hashes(self, rid: int, hashes: Sequence[int]) -> None:
+        """Publish ``rid``'s full blocks under their chained content
+        hashes so later admissions can match them.  Blocks that already
+        carry a hash (they were themselves shared) keep it; a hash already
+        published by another block keeps its first publisher."""
+        for i, h in enumerate(hashes):
+            b = self.allocs[rid][i]
+            if b in self.hash_of:
+                continue                   # block already published
+            self.hash_of[b] = h
+            self.by_hash.setdefault(h, b)
+
+    def match_prefix(self, hashes: Sequence[int]) -> List[int]:
+        """Longest run of resident blocks matching the chained hashes.
+
+        Chained hashing makes per-hash lookups compose: hash i can only
+        match if hashes 0..i-1 matched the same chain, so the result is a
+        consistent natural-order block prefix."""
+        out: List[int] = []
+        for h in hashes:
+            b = self.by_hash.get(h)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def needs_cow(self, rid: int, idx: int) -> bool:
+        """True if writing into ``rid``'s idx-th block must split it first
+        (the block is referenced by another request too)."""
+        return self.ref[self.allocs[rid][idx]] > 1
+
+    def ensure_writable(self, rid: int, idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write split of ``rid``'s idx-th block when shared.
+
+        If the block is exclusively held, returns None (write away).
+        Otherwise pops a fresh block, drops one reference on the shared
+        block (it cannot die — someone else still holds it) and swaps the
+        fresh id into ``rid``'s list, returning ``(src, dst)`` so the
+        caller can copy the physical page (PagedKVCache.copy_within).
+        Callers must check ``n_free`` (preempting if needed) before any
+        write that may CoW."""
+        b = self.allocs[rid][idx]
+        if self.ref[b] == 1:
+            return None
+        new = self._take(1)[0]
+        self.ref[b] -= 1
+        self.allocs[rid][idx] = new
+        self.stats["cow"] += 1
+        return b, new
 
 
 class PagedKVCache:
@@ -133,8 +270,14 @@ class PagedKVCache:
     ``pools`` maps pattern position -> {"k","v"} arrays of shape
     (n_blocks, total_blocks + 1, block_size, KVH, D): the leading n_blocks
     axis matches the transformer's layer scan, so the engine hands the
-    pools straight into ``forward(mode="decode")`` as the cache tree and
-    the scan slices one pool page-set per block.
+    pools straight into ``forward`` as the cache tree (decode) or the
+    paged history view (prefill, core/cdsp.pages_history_view) and the
+    scan slices one pool page-set per block.
+
+    All writes rebind the pool arrays through donated jitted helpers, so
+    XLA aliases the buffers in place instead of functionally rebuilding
+    them — never keep an external reference to a pool array across a
+    write (see kernels/flash_decode.py).
     """
 
     def __init__(self, cfg, total_blocks: int, block_size: int,
@@ -154,22 +297,61 @@ class PagedKVCache:
                       for i in self.attn_layers}
 
     # ------------------------------------------------------------- prefill
-    def write_prefill(self, blocks: List[int], caches: dict,
-                      n_tokens: int) -> None:
-        """Scatter a request's prefilled KV (natural order, from
-        ``history_to_decode_caches``) into its physical pages."""
+    def write_chunk(self, blocks: List[int], new_caches: dict,
+                    positions) -> None:
+        """Scatter ONE prefill chunk's KV into the request's pages as the
+        chunk completes — the prefill-direct-to-pages write path (replaces
+        the old whole-request ``write_prefill``; there is no dense
+        per-request KV to scatter any more).
+
+        ``new_caches`` is the chunk's forward() output tree (attention
+        entries hold only this chunk's KV, (nb, 1, L, KVH, D));
+        ``positions`` the chunk's logical position array ((1, L) or
+        (3, 1, L) for M-RoPE).  Tokens land at their logical position, so
+        pages stay in natural order regardless of chunk storage order."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import scatter_kv_prefill
-        assert len(blocks) * self.block_size >= n_tokens, (blocks, n_tokens)
+        from repro.kernels.flash_decode import scatter_kv_chunk
+        if not self.attn_layers:
+            return
+        pos2d = positions[0] if positions.ndim == 3 else positions
+        pos = jnp.asarray(pos2d[0], jnp.int32)               # (L,)
         blk = jnp.asarray(blocks, jnp.int32)
         for i in self.attn_layers:
-            ent = caches[str(i)]["self"]
-            k = ent["k"][:, 0, :n_tokens]       # (nb, S, KVH, D)
-            v = ent["v"][:, 0, :n_tokens]
-            self.pools[str(i)]["k"] = scatter_kv_prefill(
-                self.pools[str(i)]["k"], blk, k)
-            self.pools[str(i)]["v"] = scatter_kv_prefill(
-                self.pools[str(i)]["v"], blk, v)
+            ent = new_caches[str(i)]["self"]
+            self.pools[str(i)]["k"] = scatter_kv_chunk(
+                self.pools[str(i)]["k"], blk, ent["k"][:, 0], pos)
+            self.pools[str(i)]["v"] = scatter_kv_chunk(
+                self.pools[str(i)]["v"], blk, ent["v"][:, 0], pos)
+
+    # ----------------------------------------------------- page migration
+    def copy_from(self, src: "PagedKVCache", src_blocks: Iterable[int],
+                  dst_blocks: Iterable[int]) -> None:
+        """Adopt whole pages from another pool (prefill -> decode
+        admission handoff), page-granular — the paged-transfer data move.
+        Prefix-shared pages are simply *not* in the lists."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import copy_kv_blocks
+        src_ids = jnp.asarray(list(src_blocks), jnp.int32)
+        dst_ids = jnp.asarray(list(dst_blocks), jnp.int32)
+        if src_ids.size == 0:
+            return
+        for i in self.attn_layers:
+            for part in ("k", "v"):
+                self.pools[str(i)][part] = copy_kv_blocks(
+                    self.pools[str(i)][part], src.pools[str(i)][part],
+                    src_ids, dst_ids)
+
+    def copy_within(self, src_block: int, dst_block: int) -> None:
+        """Duplicate one page inside the pool — the physical half of a
+        copy-on-write split (BlockManager.ensure_writable)."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import copy_kv_block_within
+        s = jnp.asarray(src_block, jnp.int32)
+        d = jnp.asarray(dst_block, jnp.int32)
+        for i in self.attn_layers:
+            for part in ("k", "v"):
+                self.pools[str(i)][part] = copy_kv_block_within(
+                    self.pools[str(i)][part], s, d)
 
     # -------------------------------------------------------------- decode
     def adopt(self, new_caches: dict) -> None:

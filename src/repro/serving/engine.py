@@ -5,8 +5,19 @@ every CDSP prefill chunk is its own event and runs at the time the
 scheduler's plan says it runs (per-chunk SP sizes, queueing and mid-prefill
 preemption/requeue all happen at chunk boundaries, like the paper's
 fine-grained SP), KV hands off to decode instances through per-chunk
-handshake transfers, and decode reads/writes KV through BlockManager block
-tables over a paged physical pool (serving/cache_manager.PagedKVCache).
+handshake transfers, and both prefill and decode keep KV in paged block
+pools (serving/cache_manager) — pages all the way down.
+
+**Prefill is direct-to-pages**: each CDSP chunk scatters its KV into the
+engine's prefill page pool the moment it executes
+(``PagedKVCache.write_chunk``), and the next chunk reads the cross-chunk
+history straight back out of those pages (core/cdsp.pages_history_view ->
+ops.paged_prefill_attention — Pallas gather-from-block-table kernel on
+TPU, gather fallback on CPU).  Admission is a page-granular copy of the
+non-shared pages into the decode instance's pool — the dense per-request
+``(B, L)`` KV tree that the old ``history_to_decode_caches`` admission
+materialised (doubling peak memory exactly when long prompts landed) no
+longer exists anywhere.
 
 Decode is *natively paged*: the model's attention consumes the pools
 through block tables (models/attention.py — Pallas scalar-prefetch kernel
@@ -18,6 +29,17 @@ when free blocks fall under ``preempt_watermark``) the engine preempts the
 newest-arrival resident — recompute-style: its blocks are dropped and the
 generated prefix is re-prefilled through the normal CDSP plan/requeue
 path, token-for-token identical to the uninterrupted run.
+
+**Prefix sharing + copy-on-write** (``prefix_sharing=True``): admission
+matches the longest prefix of the incoming tokens against resident
+requests — hashed full blocks via BlockManager.match_prefix, plus the
+trailing partial block when the new request is a strict prefix of a
+resident — and commits those blocks by reference instead of copying
+pages.  Any append into a block referenced by several requests first
+splits it copy-on-write (``_grow_or_preempt``), so a divergent suffix can
+never corrupt a sibling's KV, and releases only free blocks whose last
+reference died.  Routing sees the reclaimed capacity through
+``DecodeInstance.credit_shared``.
 
 A DynamicRateController can be wired directly into the engine: arrivals and
 chunk-boundary queue backlog feed its sliding windows, and the policy's
@@ -45,13 +67,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cdsp import history_to_decode_caches, prefill_chunk
+from repro.core.cdsp import prefill_chunk_paged
 from repro.core.improvement_rate import DynamicRateController
 from repro.core.latency_model import DecodeLatencyModel
 from repro.models.config import ModelConfig
 from repro.models.sharding import CPU_CTX, ExecContext
 from repro.models.transformer import forward
-from repro.serving.cache_manager import BlockManager, PagedKVCache
+from repro.serving.cache_manager import (BlockManager, PagedKVCache,
+                                         block_hashes)
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import ClusterSpec, Policy, Simulator
 from repro.serving.transfer import TransferManager
@@ -59,9 +82,13 @@ from repro.serving.transfer import TransferManager
 
 @dataclass
 class _PrefillState:
-    """Running state of a chunk-granular prefill."""
+    """Running state of a chunk-granular prefill.
+
+    Attention KV lives in the engine's prefill page pool (scattered per
+    chunk); only the O(1)-in-sequence non-attention state — SSD states,
+    conv windows, cross KV — rides here as the ``aux`` history tree."""
     off: int = 0                        # tokens prefilled so far
-    history: Optional[dict] = None      # CDSP history (re-balanced KV)
+    aux: Optional[dict] = None          # non-attention cross-chunk state
     logits: Optional[jax.Array] = None  # last chunk's next-token logits
 
 
@@ -70,12 +97,17 @@ class _DecodeMeta:
     """Per-resident-request decode bookkeeping.
 
     ``blocks`` aliases the BlockManager's allocation list for the request,
-    so grow-on-demand ``extend`` calls are visible here without copying.
-    """
+    so grow-on-demand ``extend`` calls (and copy-on-write block swaps) are
+    visible here without copying.  ``tokens`` records the token ids whose
+    KV is resident — the content prefix-sharing admission matches against;
+    ``shared_tokens`` is the capacity credit taken at admission (reversed
+    on evict)."""
     row: int                            # batch row (stable while resident)
     cache_len: int                      # tokens resident in the paged pool
     last_token: int                     # next model input
     blocks: List[int] = field(default_factory=list)
+    shared_tokens: int = 0              # prefix-sharing capacity credit
+    tokens: List[int] = field(default_factory=list)
 
 
 class PagedDecodeState:
@@ -122,33 +154,83 @@ class PagedDecodeState:
     def batch_size(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    # ------------------------------------------------------------- insert
-    def insert(self, row: int, rid: int, caches: dict, cache_len: int,
-               last_token: int) -> None:
-        """Admit a request: commit its virtual block reservation (sized to
-        the prefilled KV only — growth happens per decode tick), scatter
-        the prefilled attention KV into the pages, keep aux state."""
-        blocks = self.blocks.commit(rid)
+    # ------------------------------------------------- admission / sharing
+    def plan_share(self, seq: np.ndarray, hashes: List[int]) -> tuple:
+        """Longest prefix of ``seq`` servable by already-resident blocks.
+
+        ``hashes`` is ``block_hashes(seq, block_size)`` (computed once by
+        the caller, who also registers it).  Full blocks match through
+        their chained content hashes (BlockManager.match_prefix); when
+        the tokens past the hashed chain are a prefix of a resident's
+        tokens, the owner's *next* block is shared too — typically its
+        partial tail, whose surplus tokens are masked by the sharer's
+        cache length, and whose first divergent append splits it
+        copy-on-write.  Returns ``(blocks, shared_tokens)`` with
+        shared_tokens never exceeding the shared blocks' capacity (the
+        router's capacity credit must match the blocks actually reused).
+        """
+        bs = self.block_size
+        chain = self.blocks.match_prefix(hashes)
+        if chain:
+            # chained hashes are content-addressed but hash() is not
+            # collision-proof: share only the prefix of the chain that a
+            # resident actually holding those blocks confirms
+            # token-for-token, never a chain nobody's tokens back up
+            full = [int(t) for t in seq]
+            best = 0
+            for meta in self.meta.values():
+                k = 0
+                while (k < len(chain) and k < len(meta.blocks)
+                       and meta.blocks[k] == chain[k]):
+                    k += 1
+                k = min(k, meta.cache_len // bs, len(seq) // bs)
+                if k > best and meta.tokens[:k * bs] == full[:k * bs]:
+                    best = k
+            chain = chain[:best]
+        m = len(chain)
+        n = len(seq)
+        if m * bs >= n:
+            return chain, m * bs
+        want = [int(t) for t in seq[m * bs:n]]
+        for meta in self.meta.values():
+            if (len(meta.blocks) > m and meta.blocks[:m] == chain
+                    and meta.cache_len >= n
+                    and meta.tokens[m * bs:n] == want):
+                return chain + [meta.blocks[m]], min(n, (m + 1) * bs)
+        return chain, m * bs
+
+    def insert(self, row: int, rid: int, aux_history: Optional[dict],
+               cache_len: int, last_token: int, blocks: List[int],
+               shared_tokens: int, tokens: np.ndarray) -> None:
+        """Admit a request whose attention KV already sits in the pool
+        (pages copied from the prefill pool / shared with a sibling by the
+        engine); keep its non-attention aux state and resident tokens."""
         self.slots[row] = rid
-        self.meta[rid] = _DecodeMeta(row, cache_len, last_token, blocks)
-        self.kv.write_prefill(blocks, caches, cache_len)
+        self.meta[rid] = _DecodeMeta(row, cache_len, last_token, blocks,
+                                     shared_tokens,
+                                     [int(t) for t in tokens])
         aux = {}
         for i, spec in enumerate(self.cfg.pattern):
+            src = (aux_history or {}).get(str(i), {})
             ent = {}
-            if spec.mixer != "attn":
-                ent["self"] = caches[str(i)]["self"]
-            if "cross" in caches[str(i)]:
-                ent["cross"] = caches[str(i)]["cross"]
+            if spec.mixer != "attn" and "self" in src:
+                ent["self"] = src["self"]
+            if "cross" in src:
+                ent["cross"] = src["cross"]
             if ent:
                 aux[str(i)] = ent
         self.aux[rid] = aux
 
-    def evict(self, rid: int) -> None:
-        """Drop a request (finished or preempted) and release its blocks."""
+    def evict(self, rid: int) -> _DecodeMeta:
+        """Drop a request (finished or preempted): decrement its block
+        references — only blocks with no surviving prefix-sharing sibling
+        return to the free list — and hand the meta back for the engine's
+        shared-capacity accounting."""
         m = self.meta.pop(rid)
         self.slots[m.row] = None
         self.aux.pop(rid, None)
         self.blocks.release(rid)
+        return m
 
     # -------------------------------------------------------------- batch
     def block_table(self, active: List[int]):
@@ -220,6 +302,14 @@ class ServingEngine(Simulator):
     default 0 the engine still preempts, but only on actual exhaustion.
     Every decode preemption appends a record to ``preempt_log``
     (t/rid/instance/reason/free_blocks/generated).
+
+    ``prefill_pool_blocks`` sizes the engine-wide prefill page pool that
+    chunks write into (default: ``n_prefill * max_seq`` tokens' worth).
+    Exhausting it is backpressure, not failure: the oldest page holder's
+    chunks are delayed until pages free up and younger holders restart
+    their prefill (``_prefill_backpressure``).  ``prefix_sharing=False``
+    disables block reuse across requests (every admission copies all of
+    its pages — the baseline the sharing tests compare against).
     """
 
     def __init__(self, cfg: ModelConfig, params: dict, spec: ClusterSpec,
@@ -228,13 +318,16 @@ class ServingEngine(Simulator):
                  block_size: int = 64,
                  decode_model: Optional[DecodeLatencyModel] = None,
                  rate_controller: Optional[DynamicRateController] = None,
-                 preempt_watermark: float = 0.0):
+                 preempt_watermark: float = 0.0,
+                 prefill_pool_blocks: Optional[int] = None,
+                 prefix_sharing: bool = True):
         super().__init__(spec, policy, decode_model)
         assert spec.disaggregated, "real engine decode is disaggregated"
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
         self.preempt_watermark = preempt_watermark
+        self.prefix_sharing = prefix_sharing
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.chunk_log: Dict[int, List[dict]] = {}
@@ -243,6 +336,16 @@ class ServingEngine(Simulator):
                                          n_backends=spec.backends_per_decode,
                                          bandwidth=spec.transfer_bw)
                         for _ in range(spec.n_decode)]
+        # engine-wide prefill page pool: chunks scatter their KV here as
+        # they execute; admission copies the non-shared pages into the
+        # decode instance's pool and releases these
+        if prefill_pool_blocks is None:
+            prefill_pool_blocks = max(
+                1, spec.n_prefill * max_seq // block_size)
+        self.pblocks = BlockManager(total_blocks=prefill_pool_blocks,
+                                    block_size=block_size)
+        self.pkv = PagedKVCache(cfg, prefill_pool_blocks, block_size,
+                                dtype=cfg.dtype)
         self._prefill: Dict[int, _PrefillState] = {}
         self._preempt_flags: set = set()          # mid-prefill
         self._decode_preempt_flags: set = set()   # decode, at next tick
@@ -273,6 +376,15 @@ class ServingEngine(Simulator):
                 f"request {req.rid} needs {req.prompt_len + req.output_len} "
                 f"cache tokens > decode pool capacity {cap} "
                 f"(max_batch * max_seq)")
+        pcap = self.pblocks.total_blocks * self.pblocks.block_size
+        if req.prompt_len + req.output_len - 1 > pcap:
+            # worst case: a decode preemption re-prefills prompt + all but
+            # the last generated token through the prefill page pool
+            raise ValueError(
+                f"request {req.rid} may need "
+                f"{req.prompt_len + req.output_len - 1} prefill pool "
+                f"tokens > prefill pool capacity {pcap}; raise "
+                f"prefill_pool_blocks")
         self.prompts[req.rid] = np.asarray(prompt_tokens)
         self.reqs[req.rid] = req
         self._push(req.arrival, "arrive", req.rid)
@@ -342,14 +454,31 @@ class ServingEngine(Simulator):
             self._preempt_flags.discard(rid)
             self._requeue(now, rid)
             return
-        super()._on_chunk_start(now, payload)
         req, st = self.reqs[rid], self._prefill[rid]
         seq = self._prefill_seq(rid)
         L, sp = req.chunk_plan[ci]
+        if ci != len(req.chunk_exec):
+            # an earlier chunk of this request is itself waiting on the
+            # prefill pool: keep chunk order, try again shortly
+            self._push(now + 0.05, "chunk_start", payload)
+            return
+        # prefill-direct-to-pages: grow this request's prefill-pool
+        # allocation to cover the chunk, run the chunk against the paged
+        # cross-chunk history, and scatter its KV into the pages — no
+        # dense per-request KV tree is ever built
+        self.pblocks.open(rid)
+        if not self.pblocks.extend(rid, st.off + L):
+            self._prefill_backpressure(now, rid, payload)
+            return
+        super()._on_chunk_start(now, payload)
         toks = jnp.asarray(seq[None, st.off:st.off + L])
-        st.logits, st.history = prefill_chunk(
-            self.params, self.cfg, self.ctx, toks,
-            self._positions(st.off, L), st.history)
+        pos = self._positions(st.off, L)
+        alloc = self.pblocks.allocs[rid]
+        hist_bt = alloc[:self.pblocks.blocks_for(st.off)]
+        st.logits, new_caches, st.aux = prefill_chunk_paged(
+            self.params, self.cfg, self.ctx, toks, pos,
+            self.pkv.pools, hist_bt, st.off, st.aux)
+        self.pkv.write_chunk(alloc, new_caches, pos)
         st.off += L
         self.chunk_log.setdefault(rid, []).append({
             "chunk": ci, "len": L, "sp": sp,
@@ -371,6 +500,52 @@ class ServingEngine(Simulator):
                 self.outputs[rid] = [int(jnp.argmax(
                     st.logits[0, 0, :self.cfg.vocab_size]))]
             self._resume_seq.pop(rid, None)
+
+    def _prefill_backpressure(self, now: float, rid: int, payload) -> None:
+        """Prefill page pool exhausted: apply backpressure, never crash.
+
+        The oldest-arrival page holder keeps retrying in place — decode
+        progress drains parked admissions, which release prefill pages —
+        while younger holders release their pages and restart their
+        prefill from scratch, breaking hold-and-wait so the oldest can
+        always finish (its worst case is pool-bounded by submit())."""
+        holders = [r for r in self._prefill if self.pblocks.allocs.get(r)]
+        oldest = min(holders, key=lambda r: (self.reqs[r].arrival, r),
+                     default=rid)
+        if rid != oldest and self.pblocks.allocs.get(rid):
+            self._restart_prefill(now, rid)
+        else:
+            self._push(now + 0.05, "chunk_start", payload)
+
+    def _restart_prefill(self, now: float, rid: int) -> None:
+        """Release ``rid``'s prefill pages and re-plan its prefill from
+        scratch under the then-current load (it lost the prefill pool to
+        an older request).  In-flight chunk/prefill events die via the
+        plan-generation bump; greedy determinism keeps the restarted run
+        token-identical."""
+        req = self.reqs[rid]
+        self.pblocks.release(rid)
+        self.plan_gen[rid] = self.plan_gen.get(rid, 0) + 1
+        self._cancel_bookings(now, rid, 0)
+        req.chunk_plan = []
+        req.chunk_sched = []
+        req.chunk_exec = []
+        self.chunk_log.pop(rid, None)
+        req.preemptions += 1
+        req.phase = Phase.QUEUED
+        self._prefill[rid] = _PrefillState()
+        self._push(now + 0.05, "requeue", rid)
+
+    def _on_prefill_done(self, now: float, payload) -> None:
+        rid, gen = payload
+        st = self._prefill.get(rid)
+        if (gen == self.plan_gen.get(rid) and st is not None
+                and st.off < len(self._prefill_seq(rid))):
+            # chunks were delayed by prefill-pool backpressure: the KV is
+            # not complete yet, so routing/transfer must wait for it
+            self._push(now + 0.05, "prefill_done", payload)
+            return
+        super()._on_prefill_done(now, payload)
 
     def _on_preempt(self, now: float, rid: int) -> None:
         req = self.reqs.get(rid)
@@ -411,10 +586,13 @@ class ServingEngine(Simulator):
     # ------------------------------------------------- transfer + routing
     def _start_transfer(self, now, d, req) -> None:
         """Per-chunk handshake transfer: each chunk is announced and lands
-        as its own event; decode starts once every chunk has arrived."""
+        as its own event; decode starts once every chunk has arrived.
+        Wire sizes are the pages each chunk actually finalised in the
+        prefill pool (paged handoff), not the dense-equivalent bytes."""
         dst = self.dstates[req.decode_instance]
-        chunk_bytes = [c * self.spec.kv_bytes_per_token
-                       for c, _ in req.chunk_plan]
+        chunk_bytes = TransferManager.paged_chunk_bytes(
+            [c for c, _ in req.chunk_plan], dst.block_size,
+            self.spec.kv_bytes_per_token)
         dst.transfers.handshake(req.rid, len(chunk_bytes), chunk_bytes, now)
         t = now
         for k, b in enumerate(chunk_bytes):
@@ -430,27 +608,48 @@ class ServingEngine(Simulator):
     def _on_transfer_done(self, now: float, rid: int) -> None:
         req = self.reqs[rid]
         d = self.dstates[req.decode_instance]
-        # grow-on-demand admission: reserve only the blocks the prefilled
-        # KV occupies right now — decode growth is paid per tick, with
-        # preemption (not over-reservation) covering exhaustion
+        # grow-on-demand admission with prefix sharing: match the longest
+        # resident prefix, then reserve only the tokens that need FRESH
+        # blocks — decode growth is paid per tick, with preemption (not
+        # over-reservation) covering exhaustion
         resident = self._prefill[rid].off
+        seq = np.asarray(self._prefill_seq(rid)[:resident])
+        hashes = (block_hashes(seq, d.block_size) if self.prefix_sharing
+                  else [])
+        shared, shared_tok = (d.plan_share(seq, hashes)
+                              if self.prefix_sharing else ([], 0))
+        fresh = d.blocks.blocks_for(resident) - len(shared)
         row = d.free_slot()
-        if row is None or not d.blocks.reserve_virtual(rid, resident):
+        if row is None or not d.blocks.reserve_virtual(
+                rid, fresh * d.block_size):
             # decode instance saturated: hold the backend, retry shortly
-            # (a failed reserve leaves no virtual entry behind)
+            # (a failed reserve leaves no virtual entry behind; the share
+            # plan is recomputed from scratch on the retry)
             self._push(now + 0.05, "transfer_done", rid)
             return
         d.transfers.complete(rid)
         st = self._prefill.pop(rid)
-        caches, _ = history_to_decode_caches(self.cfg, st.history,
-                                             max_seq=resident)
-        d.insert(row, rid, caches, resident, self.outputs[rid][-1])
+        blocks = d.blocks.commit(rid, shared=shared)
+        # page-granular handoff: only the non-shared suffix pages move
+        # from the prefill pool; the shared prefix is served in place by
+        # the sibling's pages.  No dense per-request KV view exists.
+        src = self.pblocks.allocs[rid]
+        d.kv.copy_from(self.pkv, src[len(shared):], blocks[len(shared):])
+        if self.prefix_sharing:
+            d.blocks.register_hashes(rid, hashes)
+        d.insert(row, rid, st.aux, resident, self.outputs[rid][-1],
+                 blocks, shared_tok, seq)
+        self.pblocks.release(rid)
         super()._on_transfer_done(now, rid)
+        inst = self.decodes[req.decode_instance]
+        if shared_tok:
+            # routing must see the true free blocks: the shared prefix
+            # consumed no new capacity
+            inst.credit_shared(shared_tok)
         # resumed requests: the parent books a fresh prompt-sized join, but
         # the re-prefilled generated prefix is resident too — charge it and
         # drop it from the remaining-growth commitment
         if req.generated:
-            inst = self.decodes[req.decode_instance]
             inst.slots_free -= req.generated
             inst.virtual -= req.generated
 
@@ -473,7 +672,9 @@ class ServingEngine(Simulator):
             "t": now, "rid": rid, "instance": did, "reason": reason,
             "free_blocks": d.blocks.n_free, "generated": len(outs),
             "chunks_discarded": len(req.chunk_plan or [])})
-        d.evict(rid)
+        meta = d.evict(rid)
+        if meta.shared_tokens:
+            inst.debit_shared(meta.shared_tokens)
         # the evicted KV is gone — the executed chunk history goes with it,
         # so the resume plan (and its handshake transfer) covers exactly
         # the re-prefilled chunks, not the discarded first-stint ones
@@ -502,12 +703,16 @@ class ServingEngine(Simulator):
 
     def _grow_or_preempt(self, now: float, did: int) -> None:
         """Before a decode step: honour manual decode-preempt flags, then
-        extend every resident's allocation to cover the token this tick
-        appends.  Growth is granted oldest-arrival first; when it would
-        exhaust the pool (or dip under the watermark while a victim
-        exists), the newest-arrival resident is recompute-preempted until
-        the step fits.  A lone resident may always grow — submit() bounds
-        its worst case to the pool, and preempting it could never help."""
+        make every resident's append target writable — extend allocations
+        past page boundaries, and split copy-on-write any block this
+        tick's token would land in that a prefix-sharing sibling still
+        references.  Both need free blocks; growth is granted
+        oldest-arrival first, and when it would exhaust the pool (or dip
+        under the watermark while a victim exists) the newest-arrival
+        resident is recompute-preempted until the step fits.  A lone
+        resident may always grow — submit() bounds its worst case to the
+        pool, it can need no CoW (nobody shares with it), and preempting
+        it could never help."""
         d = self.dstates[did]
         bm = d.blocks
         for rid in [r for r in d.slots
@@ -522,7 +727,12 @@ class ServingEngine(Simulator):
                 continue                   # became a victim this tick
             while True:
                 m = d.meta[rid]
-                need = bm.grow_blocks_needed(rid, m.cache_len + 1)
+                grow = bm.grow_blocks_needed(rid, m.cache_len + 1)
+                # this tick appends at position cache_len; a write into a
+                # still-shared block must split it first (one fresh block)
+                cow = (grow == 0 and m.cache_len % bm.block_size != 0
+                       and bm.needs_cow(rid, m.cache_len // bm.block_size))
+                need = grow or (1 if cow else 0)
                 if need == 0:
                     break
                 resident = [r for r in d.slots if r is not None]
@@ -531,9 +741,14 @@ class ServingEngine(Simulator):
                     # a lone resident may dip below the watermark; its
                     # worst case is pool-bounded by submit(), so a failed
                     # extend here is an accounting bug, not a full pool
-                    grew = bm.extend(rid, m.cache_len + 1)
-                    assert grew, (rid, need, bm.n_free)
-                    break
+                    if cow:
+                        src, dst = bm.ensure_writable(
+                            rid, m.cache_len // bm.block_size)
+                        d.kv.copy_within(src, dst)
+                    else:
+                        grew = bm.extend(rid, m.cache_len + 1)
+                        assert grew, (rid, need, bm.n_free)
+                    continue               # re-check (extend then CoW?)
                 victim = max(resident,
                              key=lambda r: (self.reqs[r].arrival, r))
                 self._preempt_decode(
@@ -567,6 +782,7 @@ class ServingEngine(Simulator):
                 logits[:, 0, :self.cfg.vocab_size], axis=-1))
             for r in active:
                 m = d.meta[r]
+                m.tokens.append(m.last_token)   # its KV landed this tick
                 m.last_token = int(nxt[m.row])
                 m.cache_len += 1
                 self.outputs[r].append(int(nxt[m.row]))
@@ -576,5 +792,7 @@ class ServingEngine(Simulator):
                            if r.generated + 1 >= r.output_len}
         super()._on_decode_tick(now, did)
         for rid in finished_before:
-            d.evict(rid)
+            meta = d.evict(rid)
+            if meta.shared_tokens:
+                inst.debit_shared(meta.shared_tokens)
             self._decode_preempt_flags.discard(rid)

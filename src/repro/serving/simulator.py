@@ -176,10 +176,22 @@ class DecodeInstance:
     full budgets up front), so routing and the overcommit guard are
     unchanged while ``slots_free`` honestly reflects grow-on-demand
     residency.
+
+    **Prefix sharing** (real engine only): when admission reuses a
+    sibling's resident blocks, those tokens consume no new capacity — the
+    engine calls ``credit_shared`` so ``slots_free`` (and hence routing's
+    freeness) sees the true free blocks, and ``debit_shared``
+    symmetrically when that request leaves.  The credit is per-request,
+    so the books always drain to zero; between the *owner* leaving and
+    the sharer leaving the accounting is optimistic by the still-shared
+    tokens (the block-exact truth lives in BlockManager.n_free — decode-
+    side exhaustion preemption covers the gap).  ``shared_tokens`` gauges
+    the live credit.
     """
     did: int
     slots_free: int
     virtual: int = 0                       # in-flight + ungrown commitments
+    shared_tokens: int = 0                 # live prefix-sharing credit
     batch: List[Request] = field(default_factory=list)
     ticking: bool = False
     backends_free: int = 8
@@ -187,6 +199,18 @@ class DecodeInstance:
 
     def freeness(self) -> float:
         return (self.slots_free - self.virtual) / (len(self.batch) + 1.0)
+
+    def credit_shared(self, tokens: int) -> None:
+        """Admitted tokens served by a sibling's blocks consume no new
+        capacity — give them back to the router's view."""
+        self.slots_free += tokens
+        self.shared_tokens += tokens
+
+    def debit_shared(self, tokens: int) -> None:
+        """Reverse ``credit_shared`` when the sharing request leaves (its
+        release credited tokens that never consumed capacity)."""
+        self.slots_free -= tokens
+        self.shared_tokens -= tokens
 
 
 class Simulator:

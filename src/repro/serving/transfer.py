@@ -27,6 +27,31 @@ class _ReqState:
 class TransferManager:
     """Receive-side manager for one decode instance."""
 
+    @staticmethod
+    def paged_chunk_bytes(chunk_lens: List[int], block_size: int,
+                          kv_bytes_per_token: float) -> List[float]:
+        """Per-chunk wire sizes for the paged KV handoff.
+
+        With prefill-direct-to-pages the unit of transfer is the physical
+        page, so each chunk ships the pages whose content it *finalised*
+        — ``floor(cum/bs) - floor(prev_cum/bs)`` whole pages (a page
+        cannot move before its last token lands) — rather than its
+        dense-equivalent ``len * kv_bytes_per_token``.  The trailing
+        partial page rides with the last chunk.  Totals equal the
+        request's page footprint (``blocks_for(sum) * block_size *
+        kv_bytes_per_token``) and the number of ``chunk_landed`` events is
+        unchanged — one per chunk, even when a chunk finalises no page."""
+        page_b = block_size * kv_bytes_per_token
+        out, pages_done, cum = [], 0, 0
+        for L in chunk_lens:
+            cum += L
+            pages = cum // block_size
+            out.append((pages - pages_done) * page_b)
+            pages_done = pages
+        if chunk_lens and cum % block_size:
+            out[-1] += page_b                  # trailing partial page
+        return out
+
     def __init__(self, n_backends: int, bandwidth: float = 40e9):
         self.n_backends = n_backends
         self.bandwidth = bandwidth

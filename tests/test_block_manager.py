@@ -1,0 +1,145 @@
+"""BlockManager invariants under the refcount / prefix-sharing /
+copy-on-write machinery — property-style tests over random operation
+sequences (real hypothesis when installed, the seeded shim otherwise).
+
+The invariants that must hold after EVERY operation:
+  * no block is both free and allocated, and the free list has no dups
+    (no double-free);
+  * n_free + distinct allocated blocks == total_blocks (no leak);
+  * every allocated block's refcount equals the number of request
+    allocation lists containing it;
+  * the hash index only points at live blocks.
+Draining every request must return the pool to fully-free.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, strategies as st
+
+from repro.serving.cache_manager import BlockManager, block_hashes
+
+TOTAL, BS = 12, 8
+
+
+def check_invariants(bm: BlockManager):
+    free = bm.free_blocks
+    assert len(free) == len(set(free)), "double-free: duplicate free block"
+    held = [b for blocks in bm.allocs.values() for b in blocks]
+    distinct = set(held)
+    assert not distinct & set(free), "block both free and allocated"
+    assert bm.n_free + len(distinct) == bm.total_blocks, "block leak/drift"
+    for b in distinct:
+        assert bm.ref[b] == held.count(b), f"refcount drift on block {b}"
+    assert set(bm.ref) == distinct, "refcount entries for dead blocks"
+    for h, b in bm.by_hash.items():
+        assert b in distinct, "hash index points at a dead block"
+        assert bm.hash_of.get(b) == h
+    assert bm.virtual_blocks >= 0
+    assert bm.peak_in_use <= bm.total_blocks
+
+
+def apply_ops(ops):
+    """Drive a BlockManager through a random op sequence.  Each op is
+    (kind, rid, n); invalid ops (unknown rid, over-capacity asks) are
+    skipped exactly like the engine guards them."""
+    bm = BlockManager(total_blocks=TOTAL, block_size=BS)
+    rng = np.random.default_rng(1234)
+    for kind, rid, n in ops:
+        if kind == 0:                                   # reserve + commit
+            if rid in bm.allocs or rid in bm.virtual_tokens:
+                continue
+            if bm.reserve_virtual(rid, n):
+                bm.commit(rid)
+        elif kind == 1:                                 # commit w/ sharing
+            if rid in bm.allocs or rid in bm.virtual_tokens:
+                continue
+            donors = [r for r in bm.allocs if bm.allocs[r]]
+            shared = []
+            if donors:
+                donor = donors[int(rng.integers(len(donors)))]
+                k = int(rng.integers(len(bm.allocs[donor]) + 1))
+                shared = bm.allocs[donor][:k]
+            if bm.reserve_virtual(rid, n):
+                bm.commit(rid, shared=shared)
+        elif kind == 2:                                 # extend
+            if rid in bm.allocs:
+                bm.extend(rid, n + len(bm.allocs[rid]) * BS)
+        elif kind == 3:                                 # release
+            bm.release(rid)
+        elif kind == 4:                                 # copy-on-write
+            if rid in bm.allocs and bm.allocs[rid] and bm.n_free > 0:
+                idx = int(rng.integers(len(bm.allocs[rid])))
+                if bm.needs_cow(rid, idx):
+                    src, dst = bm.ensure_writable(rid, idx)
+                    assert src != dst
+                    assert bm.allocs[rid][idx] == dst
+        elif kind == 5:                                 # publish hashes
+            if rid in bm.allocs and bm.allocs[rid]:
+                toks = rng.integers(0, 50, len(bm.allocs[rid]) * BS)
+                bm.register_hashes(
+                    rid, block_hashes(toks, BS)[:len(bm.allocs[rid])])
+        check_invariants(bm)
+    for rid in list(bm.allocs):
+        bm.release(rid)
+        check_invariants(bm)
+    assert bm.n_free == bm.total_blocks and not bm.ref and not bm.by_hash
+
+
+@settings(max_examples=40)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(1, 4 * BS)),
+                min_size=1, max_size=60))
+def test_random_sequences_never_leak_or_double_free(ops):
+    apply_ops(ops)
+
+
+def test_shared_release_keeps_sibling_blocks():
+    """Releasing one holder of shared blocks must not free them; the last
+    release must."""
+    bm = BlockManager(total_blocks=8, block_size=4)
+    assert bm.reserve_virtual(1, 12)
+    a = bm.commit(1)
+    assert bm.reserve_virtual(2, 4)
+    b = bm.commit(2, shared=a[:2])
+    assert b[:2] == a[:2] and bm.ref[a[0]] == 2
+    check_invariants(bm)
+    freed = bm.release(1)
+    assert set(freed) == {a[2]}, "shared blocks must survive the owner"
+    check_invariants(bm)
+    freed = bm.release(2)
+    assert set(freed) == set(a[:2] + b[2:])
+    assert bm.n_free == bm.total_blocks
+
+
+def test_cow_preserves_shared_block_and_hash():
+    """ensure_writable on a shared block swaps in a fresh block for the
+    writer only; the source block, its other holder and its published
+    hash stay intact."""
+    bm = BlockManager(total_blocks=8, block_size=4)
+    toks = np.arange(8)
+    assert bm.reserve_virtual(1, 8)
+    a = bm.commit(1)
+    bm.register_hashes(1, block_hashes(toks, 4))
+    assert bm.reserve_virtual(2, 0)
+    b = bm.commit(2, shared=a)
+    assert bm.ensure_writable(2, 0) == (a[0], b := bm.allocs[2][0])
+    assert b != a[0] and bm.ref[a[0]] == 1 and bm.ref[b] == 1
+    assert bm.hash_of[a[0]] == block_hashes(toks, 4)[0]
+    assert b not in bm.hash_of, "the CoW copy must not inherit the hash"
+    assert bm.ensure_writable(2, 0) is None, "exclusive block needs no CoW"
+    check_invariants(bm)
+
+
+def test_match_prefix_follows_hash_chain():
+    bm = BlockManager(total_blocks=8, block_size=4)
+    toks = np.array([1, 2, 3, 4, 5, 6, 7, 8])
+    assert bm.reserve_virtual(1, 8)
+    bm.commit(1)
+    hashes = block_hashes(toks, 4)
+    bm.register_hashes(1, hashes)
+    assert bm.match_prefix(hashes) == bm.allocs[1]
+    assert bm.match_prefix(hashes[:1]) == bm.allocs[1][:1]
+    other = block_hashes(np.array([9, 9, 9, 9, 5, 6, 7, 8]), 4)
+    assert bm.match_prefix(other) == []
+    # same tail tokens under a different prefix must NOT match (chained)
+    assert other[1] != hashes[1]

@@ -1,0 +1,279 @@
+"""Pages all the way down: prefill-direct-to-pages admission, prefix
+sharing with refcounted blocks, copy-on-write on divergence, paged
+cross-chunk prefill attention, and the paged transfer sizes."""
+
+import inspect
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import generate_dense as _generate
+from repro.core.latency_model import table1_model
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec
+from repro.serving.transfer import TransferManager
+from test_paged_engine import ParallelTwoChunkPolicy, TwoChunkPolicy
+
+MODEL = table1_model()
+
+
+def _engine(cfg, params, *, sharing=True, max_seq=256, block_size=16,
+            max_batch=4, policy=ParallelTwoChunkPolicy):
+    # ParallelTwoChunkPolicy prefills each request on its own instance
+    # pair, so later arrivals can be admitted while earlier ones are
+    # still decoding — the window in which prefix sharing happens
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    return ServingEngine(cfg, params, spec, policy(MODEL, spec),
+                         max_batch=max_batch, max_seq=max_seq,
+                         block_size=block_size, prefix_sharing=sharing)
+
+
+def _serve(cfg, params, jobs, **kw):
+    """jobs: list of (rid, arrival, prompt, output_len)."""
+    eng = _engine(cfg, params, **kw)
+    for rid, arrival, prompt, out_len in jobs:
+        req = Request(rid=rid, arrival=arrival, prompt_len=len(prompt),
+                      output_len=out_len)
+        eng.submit(req, prompt)
+    outs = eng.serve()
+    return eng, outs
+
+
+def _assert_drained(eng):
+    """Every pool and every accounting gauge returns to baseline."""
+    bm = eng.dstates[0].blocks
+    assert bm.n_free == bm.total_blocks and not bm.allocs and not bm.ref
+    assert not bm.by_hash and not bm.hash_of
+    assert eng.pblocks.n_free == eng.pblocks.total_blocks
+    inst = eng.decodes[0]
+    assert inst.shared_tokens == 0
+    assert inst.slots_free == eng.spec.cache_slots, "capacity accounting drift"
+
+
+# ------------------------------------------------------------ prefix sharing
+def test_shared_prefix_shares_blocks_outputs_bit_identical(
+        reduced_params_cache):
+    """Two requests with a common 48-token prompt prefix: admission must
+    reuse the sibling's full blocks (fewer fresh blocks committed than the
+    sharing-disabled run), outputs must be bit-identical to both the
+    unshared run and solo serving."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(31)
+    common = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+    pa = np.concatenate([common,
+                         rng.integers(0, cfg.vocab_size, 16)]).astype(np.int32)
+    pb = np.concatenate([common,
+                         rng.integers(0, cfg.vocab_size, 16)]).astype(np.int32)
+    solo_a, outs_a = _serve(cfg, params, [(0, 0.0, pa, 12)])
+    solo_b, outs_b = _serve(cfg, params, [(1, 0.0, pb, 6)])
+    jobs = [(0, 0.0, pa, 12), (1, 0.01, pb, 6)]
+    unshared, outs_u = _serve(cfg, params, jobs, sharing=False)
+    shared, outs_s = _serve(cfg, params, jobs, sharing=True)
+    # the scenario only exercises sharing if B joined while A was resident
+    assert shared.reqs[1].transfer_done < shared.reqs[0].done
+    bm = shared.dstates[0].blocks
+    assert bm.stats["shared"] >= 3, "48-token prefix = 3 full shared blocks"
+    assert bm.stats["fresh"] < unshared.dstates[0].blocks.stats["fresh"], \
+        "sharing must commit fewer fresh blocks than the unshared run"
+    assert outs_s[0] == outs_u[0] == outs_a[0]
+    assert outs_s[1] == outs_u[1] == outs_b[1]
+    assert unshared.dstates[0].blocks.stats["shared"] == 0
+    _assert_drained(shared)
+    _assert_drained(unshared)
+
+
+def test_cow_divergent_suffix_never_corrupts_sibling(reduced_params_cache):
+    """B's prompt is a strict prefix of A's, ending mid-block: admission
+    shares A's partial block too (the surplus is masked by B's cache
+    length), and B's very first generated token — which lands inside that
+    shared block — must trigger a copy-on-write split.  Without CoW, B's
+    divergent token would overwrite A's KV at position 40; both requests
+    must decode exactly their solo outputs."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(37)
+    pa = rng.integers(0, cfg.vocab_size, 56).astype(np.int32)
+    pb = pa[:40].copy()                  # strict prefix, 2.5 blocks of 16
+    solo_a, outs_a = _serve(cfg, params, [(0, 0.0, pa, 12)])
+    solo_b, outs_b = _serve(cfg, params, [(1, 0.0, pb, 8)])
+    shared, outs = _serve(cfg, params,
+                          [(0, 0.0, pa, 12), (1, 0.01, pb, 8)], sharing=True)
+    assert shared.reqs[1].transfer_done < shared.reqs[0].done
+    bm = shared.dstates[0].blocks
+    assert bm.stats["shared"] >= 3, \
+        "2 hashed full blocks + the partial tail block must be shared"
+    assert bm.stats["cow"] >= 1, \
+        "B's first append into the shared partial block must copy-on-write"
+    assert outs[0] == outs_a[0], "sibling KV corrupted by divergent suffix"
+    assert outs[1] == outs_b[1]
+    _assert_drained(shared)
+
+
+# ------------------------------------- admission is dense-free + oracle match
+def test_admission_flow_has_no_dense_kv_tree():
+    """The engine's admission/transfer flow must not materialise a dense
+    per-request KV tree: history_to_decode_caches is gone from engine.py
+    (it survives in core/cdsp.py as the library path / test oracle)."""
+    import repro.serving.engine as engine_mod
+    src = inspect.getsource(engine_mod)
+    assert "history_to_decode_caches(" not in src, \
+        "engine admission must not call the dense conversion"
+    assert not hasattr(engine_mod, "history_to_decode_caches"), \
+        "engine must not even import the dense conversion"
+    assert "write_chunk" in src and "copy_from" in src
+
+
+def test_combined_schedule_matches_dense_oracle(reduced_params_cache):
+    """Multi-chunk, SP-changing, preemption-containing schedule (one
+    mid-prefill preempt + one decode-side preempt) generates exactly the
+    pre-refactor dense-oracle tokens with prefill-direct-to-pages."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(41)
+    p0 = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+    jobs = [(0, 0.0, p0, 5), (1, 0.02, p1, 6)]
+    base, base_outs = _serve(cfg, params, jobs)
+    tt = base.reqs[1].token_times
+    eng = _engine(cfg, params)
+    for rid, arrival, prompt, out_len in jobs:
+        eng.submit(Request(rid=rid, arrival=arrival, prompt_len=len(prompt),
+                           output_len=out_len), prompt)
+    eng.preempt(0, at=1e-6)                      # mid-prefill, chunk boundary
+    eng.preempt(1, at=0.5 * (tt[2] + tt[3]))     # mid-decode
+    outs = eng.serve()
+    assert eng.reqs[0].preemptions >= 1 and eng.reqs[1].preemptions >= 1
+    assert any(e["reason"] == "manual" for e in eng.preempt_log)
+    for rid, prompt in ((0, p0), (1, p1)):
+        # multi-chunk with an SP change (TwoChunkPolicy: SP 1 -> 2)
+        assert len(eng.reqs[rid].chunk_plan) >= 2
+        assert len({sp for _, sp in eng.reqs[rid].chunk_plan}) >= 2
+        want = _generate(params, cfg, prompt, len(outs[rid]))
+        assert outs[rid] == base_outs[rid] == want
+    _assert_drained(eng)
+
+
+def test_prefill_pool_backpressure_completes_and_matches(
+        reduced_params_cache):
+    """A deliberately tiny prefill page pool (5 blocks for three
+    concurrent 4-block prefills) must backpressure — delay the oldest
+    holder's chunks, restart younger holders — instead of crashing, and
+    every request must still complete token-for-token."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=256, block_size=16,
+                        prefill_pool_blocks=5)
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+               for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, arrival=i * 0.001, prompt_len=64,
+                           output_len=4), p)
+    outs = eng.serve()
+    assert any(r.preemptions > 0 for r in eng.reqs.values()), \
+        "the tiny pool must actually force a prefill restart"
+    for i, p in enumerate(prompts):
+        assert eng.reqs[i].done is not None
+        assert outs[i] == _generate(params, cfg, p, len(outs[i]))
+    assert eng.pblocks.n_free == eng.pblocks.total_blocks
+    _assert_drained(eng)
+
+
+# --------------------------------------------------- actionable config error
+def test_paged_decode_kv_split_error_is_actionable(reduced_params_cache):
+    """The paged-decode + kv_split_axis combination must fail with a
+    message naming the config knobs involved (ExecContext.kv_split_axis,
+    the dense-cache escape hatch) rather than a bare NotImplementedError."""
+    import jax
+
+    from repro.models.attention import attention_block
+    from repro.models.sharding import ExecContext
+    cfg, params = reduced_params_cache("yi-9b")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("kv",))
+    ctx = ExecContext(mesh=mesh, kv_split_axis="kv")
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["0"])
+    x = jnp.zeros((1, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    cache = {"k": None, "v": None,
+             "block_table": jnp.zeros((1, 1), jnp.int32)}
+    with pytest.raises(NotImplementedError) as ei:
+        attention_block(x, p, cfg, ctx, jnp.zeros((1, 1), jnp.int32),
+                        "decode", cache=cache,
+                        cache_len=jnp.zeros((1,), jnp.int32))
+    msg = str(ei.value)
+    assert "kv_split_axis" in msg and "'kv'" in msg
+    assert "dense" in msg and "block_table" in msg
+
+
+# ------------------------------------------------------- paged prefill kernel
+def _build_pools(rng, B, npg, page, KVH, D, k_all, v_all, hist):
+    from repro.kernels.flash_decode import scatter_kv_chunk
+    pool_shape = (1, B * npg + 1, page, KVH, D)
+    kp = jnp.zeros(pool_shape, jnp.float32)
+    vp = jnp.zeros(pool_shape, jnp.float32)
+    perm = rng.permutation(B * npg)              # non-contiguous pages
+    bt = np.zeros((B, npg), np.int32)
+    for b in range(B):
+        bt[b] = perm[b * npg:(b + 1) * npg]
+        pos = jnp.arange(hist[b], dtype=jnp.int32)
+        kp = scatter_kv_chunk(kp, jnp.asarray(bt[b]),
+                              jnp.asarray(k_all[None, b, :hist[b]]), pos)
+        vp = scatter_kv_chunk(vp, jnp.asarray(bt[b]),
+                              jnp.asarray(v_all[None, b, :hist[b]]), pos)
+    return kp[0], vp[0], jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("window", [None, 10])
+def test_paged_prefill_attention_matches_dense(window):
+    """ops.paged_prefill_attention — gather fallback AND the Pallas
+    composition (paged_flash_prefill + merge, interpret mode) — equals
+    dense attention over [history ++ chunk] on a permuted page layout."""
+    from repro.kernels import ops
+    from repro.kernels.ref import attention_ref
+    rng = np.random.default_rng(5)
+    B, Sq, H, KVH, D, page, npg = 2, 8, 4, 2, 16, 8, 3
+    hist = np.array([13, 20])
+    Smax = npg * page
+    k_all = rng.standard_normal((B, Smax + Sq, KVH, D)).astype(np.float32)
+    v_all = rng.standard_normal((B, Smax + Sq, KVH, D)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    kp, vp, bt = _build_pools(rng, B, npg, page, KVH, D, k_all, v_all, hist)
+    q_pos = jnp.stack([jnp.arange(hist[b], hist[b] + Sq)
+                       for b in range(B)]).astype(jnp.int32)
+    k_new = jnp.asarray(k_all[:, Smax:])
+    v_new = jnp.asarray(v_all[:, Smax:])
+    want = jnp.concatenate([
+        attention_ref(
+            q[b:b + 1],
+            jnp.asarray(np.concatenate([k_all[b, :hist[b]],
+                                        k_all[b, Smax:]]))[None],
+            jnp.asarray(np.concatenate([v_all[b, :hist[b]],
+                                        v_all[b, Smax:]]))[None],
+            q_pos[b:b + 1],
+            jnp.concatenate([jnp.arange(hist[b]),
+                             q_pos[b]]).astype(jnp.int32)[None],
+            causal=True, window=window)
+        for b in range(B)])
+    for impl, tol in (("ref", 1e-5), ("interpret", 1e-4)):
+        got = ops.paged_prefill_attention(
+            q, k_new, v_new, q_pos, q_pos, kp, vp, bt,
+            jnp.asarray(hist), causal=True, window=window, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------- paged transfer sizes
+def test_paged_chunk_bytes_counts_pages_not_dense_tokens():
+    bpt, bs = 2.0, 16
+    page_b = bs * bpt
+    # chunk 2 finalises no page (tops up page 1); trailing partial page
+    # rides with the last chunk; totals == page footprint
+    got = TransferManager.paged_chunk_bytes([20, 10, 15], bs, bpt)
+    assert got == [1 * page_b, 0.0, 2 * page_b]
+    assert sum(got) == -(-45 // bs) * page_b
+    got = TransferManager.paged_chunk_bytes([32, 32], bs, bpt)
+    assert got == [2 * page_b, 2 * page_b]
+    assert TransferManager.paged_chunk_bytes([], bs, bpt) == []
+    # one tiny chunk still ships its (only, partial) page
+    assert TransferManager.paged_chunk_bytes([3], bs, bpt) == [page_b]
