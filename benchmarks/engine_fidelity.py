@@ -12,8 +12,11 @@ allocation and decode-side preemption, reporting the preemption count and
 that every request still completes (token-for-token vs the roomy run).
 A third segment serves a shared-prefix workload twice (prefix sharing
 on/off) and reports the prefix-hit rate, peak blocks in use and output
-equality; a fourth micro-benchmarks the donated page-scatter helpers
-(the per-tick pool-update cost that ``donate_argnums`` keeps from
+equality; a fourth squeezes the tight-pool trace through BOTH preemption
+policies (swap-to-host vs recompute) and reports recomputed prefill
+tokens, TTFT/worst-TBT deltas, PCIe swap bytes and host-prefix-cache
+hits; a fifth micro-benchmarks the donated page-scatter helpers (the
+per-tick pool-update cost that ``donate_argnums`` keeps from
 functionally rebuilding the pool arrays).
 
 CI runs this via ``run.py --quick --only engine_fidelity --json ...`` and
@@ -143,6 +146,46 @@ def run(quick: bool = False):
           f"| peak blocks {peak} vs {peak_un} unshared | "
           f"outputs match unshared: {sh_match}")
 
+    # --- host offload segment: swap vs recompute preemption under the
+    # same block pressure as above.  Swap parks victims' KV on the host
+    # and brings it back over modeled PCIe, so it should complete the
+    # trace with (near-)zero recomputed prefill tokens; recompute burns
+    # the victim's whole resume sequence through the prefill pool again.
+    def serve_pressure(policy):
+        s = ClusterSpec(n_prefill=16, n_decode=1,
+                        sp_candidates=(1, 2, 4, 8))
+        e = ServingEngine(cfg, params, s,
+                          make_policy("tetris", table1_model(), s),
+                          max_batch=4, max_seq=64, block_size=16,
+                          preempt_watermark=0.1, preempt_policy=policy)
+        _submit_trace(e, cfg, n_req, spacing=0.002)
+        t0 = time.perf_counter()
+        e.serve()
+        return e, time.perf_counter() - t0
+
+    def _mean(vals):
+        return float(np.mean(vals)) if vals else float("nan")
+
+    rec_e, _ = serve_pressure("recompute")
+    sw_e, sw_wall = serve_pressure("swap")
+    retok_rec = sum(p["resume_tokens"] for p in rec_e.preempt_log)
+    retok_sw = sum(p["resume_tokens"] for p in sw_e.preempt_log)
+    ttft_rec = _mean([r.ttft for r in rec_e.reqs.values()])
+    ttft_sw = _mean([r.ttft for r in sw_e.reqs.values()])
+    tbt_rec = _mean([max(r.tbts) for r in rec_e.reqs.values() if r.tbts])
+    tbt_sw = _mean([max(r.tbts) for r in sw_e.reqs.values() if r.tbts])
+    sw_st = sw_e.swap_stats
+    sw_match = all(sw_e.outputs[r] == eng.outputs[r] for r in eng.outputs)
+    rec_match = all(rec_e.outputs[r] == eng.outputs[r] for r in eng.outputs)
+    print(f"host offload: swap {sw_st['swap_outs']} out/"
+          f"{sw_st['swap_ins']} in "
+          f"({(sw_st['bytes_out'] + sw_st['bytes_in']) / 2**20:.1f} MiB "
+          f"PCIe), recomputed prefill tokens {retok_sw} vs {retok_rec} "
+          f"recompute-policy | TTFT mean {ttft_sw:.3f}s vs {ttft_rec:.3f}s"
+          f" | worst TBT mean {tbt_sw:.3f}s vs {tbt_rec:.3f}s | "
+          f"host prefix hits {sw_st['host_prefix_hits']} | outputs match "
+          f"roomy run: swap={sw_match} recompute={rec_match}")
+
     # --- donated page-write micro-benchmark: per-tick pool update cost.
     # scatter_kv_token/scatter_kv_chunk/copy_kv_blocks donate their pool
     # argument, so XLA aliases the buffer in place instead of rebuilding
@@ -179,6 +222,12 @@ def run(quick: bool = False):
         fmt_row("engine.prefix_hit_rate", sh_wall * 1e6 / max(n_share, 1),
                 f"{hit:.2f}|peak={peak}/{peak_un}|cow={st['cow']}"
                 f"|match={int(sh_match)}"),
+        fmt_row("engine.swap_vs_recompute_retok",
+                sw_wall * 1e6 / max(n_toks, 1),
+                f"{retok_sw}/{retok_rec}|swaps={sw_st['swap_outs']}"
+                f"|pcie_mib={(sw_st['bytes_out'] + sw_st['bytes_in']) / 2**20:.1f}"
+                f"|hosthits={sw_st['host_prefix_hits']}"
+                f"|match={int(sw_match and rec_match)}"),
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
     ]
 

@@ -156,6 +156,28 @@ def analytic_model(n_params_active: float, n_layers: int, d_model: int,
     return PrefillLatencyModel(coeffs)
 
 
+# ------------------------------------------------------------- host offload
+@dataclass(frozen=True)
+class HostOffloadModel:
+    """PCIe cost model for device<->host KV block movement (swap tier).
+
+    Swap-to-host preemption (Infinite-LLM's memory tiering, LoongServe's
+    proactive KV migration) trades a PCIe round trip for the re-prefill
+    FLOPs that recompute preemption burns.  The engine's ``auto`` policy
+    compares ``swap_time`` of a victim's resident pages against the
+    prefill model's latency for its resume sequence — the PCIe term is
+    the only new hardware constant.  Defaults are PCIe gen4 x16 with a
+    conservative effective bandwidth and a per-transfer launch overhead
+    (DMA setup + pinned-buffer staging).
+    """
+    pcie_bw: float = 24e9        # bytes/s, effective device<->host
+    base: float = 2e-4           # s per transfer (DMA launch/staging)
+
+    def swap_time(self, n_bytes: float) -> float:
+        """Seconds to move ``n_bytes`` of KV across PCIe, one direction."""
+        return self.base + n_bytes / self.pcie_bw
+
+
 # ------------------------------------------------------------------ decode
 # Fig. 2 calibration: decode step latency multipliers vs (SP1, TP8).
 FIG2_TP_MULT = {8: 1.0, 4: 1.93, 2: 3.87, 1: 5.73}       # Fig. 2-(a)

@@ -30,6 +30,10 @@ Paged variants for the serving engine's block-table KV layout
 * ``copy_kv_blocks`` / ``copy_kv_block_within`` — page-granular block
   copies: prefill-pool -> decode-pool admission handoff, and the
   copy-on-write split of a shared block (serving/cache_manager.py).
+* ``gather_kv_blocks`` / ``scatter_kv_blocks`` — device<->host staging for
+  the host KV offload tier (serving/kv_offload.py): gather pulls a
+  victim's pages off the device for a swap-out / demotion, scatter lands
+  host pages back into the pool for a swap-in / prefix-cache promotion.
 * ``scatter_kv_token`` and ``gather_kv_pages`` are validation/debug
   helpers only: the per-step token append happens inline in the model's
   paged decode branch (models/attention.py), which scatters into the pool
@@ -242,6 +246,31 @@ def copy_kv_blocks(dst_pool: jax.Array, src_pool: jax.Array,
     """
     return dst_pool.at[:, dst_blocks].set(
         src_pool[:, src_blocks].astype(dst_pool.dtype))
+
+
+@jax.jit
+def gather_kv_blocks(pool: jax.Array, blocks: jax.Array) -> jax.Array:
+    """Gather whole physical pages out of a pool — the device-side staging
+    read of a swap-out / host demotion (serving/kv_offload.py).
+
+    pool: (nb, n_pages, page, KVH, D); blocks: (n,) int32 physical ids ->
+    (nb, n, page, KVH, D).  Not donated: the pool stays live (the caller
+    moves the gathered pages to host and only then releases the blocks).
+    """
+    return pool[:, blocks]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_kv_blocks(pool: jax.Array, blocks: jax.Array,
+                      pages: jax.Array) -> jax.Array:
+    """Scatter whole pages into a pool — the device-side staging write of
+    a swap-in / host-prefix-cache promotion (serving/kv_offload.py).
+
+    blocks: (n,) int32 destination physical ids; pages: (nb, n, page, KVH,
+    D), typically a host (numpy) slice that XLA uploads as it scatters.
+    The pool argument is donated like the other page copiers.
+    """
+    return pool.at[:, blocks].set(pages.astype(pool.dtype))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

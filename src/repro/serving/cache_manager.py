@@ -49,7 +49,8 @@ corrupt live pages.  All pool writes go through donated jitted helpers
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -93,6 +94,12 @@ class BlockManager:
     ref: Dict[int, int] = field(default_factory=dict)        # block -> holders
     hash_of: Dict[int, int] = field(default_factory=dict)    # block -> hash
     by_hash: Dict[int, int] = field(default_factory=dict)    # hash -> block
+    tokens_of: Dict[int, tuple] = field(default_factory=dict)  # blk -> tokens
+    # host-offload hook: called as demote_cb(block, hash, tokens) when a
+    # hash-published block's last reference dies, BEFORE the block returns
+    # to the free list — the engine copies the page to the host tier so
+    # the prefix stays matchable after eviction (serving/kv_offload.py)
+    demote_cb: Optional[Callable[[int, int, tuple], None]] = None
     peak_in_use: int = 0
     stats: Dict[str, int] = field(default_factory=lambda: {
         "fresh": 0, "shared": 0, "cow": 0})
@@ -182,7 +189,9 @@ class BlockManager:
         need = self.blocks_for(n_tokens) - len(self.allocs[rid])
         if need <= 0:
             return True
-        if need > self.n_free:
+        if need > self.n_free - self.virtual_blocks:
+            # growth must not consume blocks promised to a pending
+            # reservation (an in-flight swap-in holds one across events)
             return False
         self.allocs[rid] += self._take(need)
         return True
@@ -193,7 +202,10 @@ class BlockManager:
         Returns the blocks that actually went back to the free list —
         blocks still referenced by a prefix-sharing sibling survive, along
         with their published hashes.  A dead block's hash entries are
-        retired with it (sharing happens across *resident* requests only).
+        retired with it (sharing happens across *resident* requests only)
+        — but a hash-published block is first offered to the host tier via
+        ``demote_cb`` (called before the block can be reallocated, so its
+        page content is still intact when the callback copies it out).
         """
         freed: List[int] = []
         for b in self.allocs.pop(rid, []):
@@ -201,25 +213,39 @@ class BlockManager:
             if self.ref[b] == 0:
                 del self.ref[b]
                 h = self.hash_of.pop(b, None)
+                toks = self.tokens_of.pop(b, None)
                 if h is not None and self.by_hash.get(h) == b:
                     del self.by_hash[h]
+                    if self.demote_cb is not None and toks is not None:
+                        self.demote_cb(b, h, toks)
                 self.free_blocks.append(b)
                 freed.append(b)
         self.virtual_tokens.pop(rid, None)
         return freed
 
     # ------------------------------------------------- prefix sharing / CoW
-    def register_hashes(self, rid: int, hashes: Sequence[int]) -> None:
+    def register_hashes(self, rid: int, hashes: Sequence[int],
+                        tokens: Optional[Sequence[int]] = None) -> None:
         """Publish ``rid``'s full blocks under their chained content
         hashes so later admissions can match them.  Blocks that already
         carry a hash (they were themselves shared) keep it; a hash already
-        published by another block keeps its first publisher."""
+        published by another block keeps its first publisher.
+
+        ``tokens`` (the token ids whose KV the blocks hold, at least
+        ``len(hashes) * block_size`` of them) lets the block carry its
+        content for hash-collision verification when it is later demoted
+        to the host prefix tier — without it the block is still shareable
+        on-device (residents confirm token-for-token) but not demotable."""
         for i, h in enumerate(hashes):
             b = self.allocs[rid][i]
             if b in self.hash_of:
                 continue                   # block already published
             self.hash_of[b] = h
             self.by_hash.setdefault(h, b)
+            if tokens is not None:
+                self.tokens_of[b] = tuple(
+                    int(t) for t in
+                    tokens[i * self.block_size:(i + 1) * self.block_size])
 
     def match_prefix(self, hashes: Sequence[int]) -> List[int]:
         """Longest run of resident blocks matching the chained hashes.
@@ -324,22 +350,49 @@ class PagedKVCache:
                 self.pools[str(i)]["v"], blk, ent["v"][:, 0], pos)
 
     # ----------------------------------------------------- page migration
-    def copy_from(self, src: "PagedKVCache", src_blocks: Iterable[int],
+    def copy_from(self, src, src_blocks: Iterable[int],
                   dst_blocks: Iterable[int]) -> None:
-        """Adopt whole pages from another pool (prefill -> decode
-        admission handoff), page-granular — the paged-transfer data move.
-        Prefix-shared pages are simply *not* in the lists."""
+        """Adopt whole pages from another pool, page-granular.
+
+        ``src`` is either another device ``PagedKVCache`` (prefill ->
+        decode admission handoff — the paged-transfer data move; prefix-
+        shared pages are simply *not* in the lists) or a host-tier
+        ``kv_offload.HostKVPool`` (numpy pools with the same layout): a
+        swap-in or second-tier prefix-cache promotion.  Host sources are
+        sliced on the host first, so only the needed pages cross PCIe
+        (``scatter_kv_blocks``); device sources stay on-device
+        (``copy_kv_blocks``).  Both paths donate this pool's buffers."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import copy_kv_blocks
-        src_ids = jnp.asarray(list(src_blocks), jnp.int32)
+        from repro.kernels.flash_decode import (copy_kv_blocks,
+                                                scatter_kv_blocks)
+        src_list = list(src_blocks)
         dst_ids = jnp.asarray(list(dst_blocks), jnp.int32)
-        if src_ids.size == 0:
+        if not src_list:
             return
+        src_ids = jnp.asarray(src_list, jnp.int32)
         for i in self.attn_layers:
             for part in ("k", "v"):
-                self.pools[str(i)][part] = copy_kv_blocks(
-                    self.pools[str(i)][part], src.pools[str(i)][part],
-                    src_ids, dst_ids)
+                sp = src.pools[str(i)][part]
+                if isinstance(sp, np.ndarray):
+                    self.pools[str(i)][part] = scatter_kv_blocks(
+                        self.pools[str(i)][part], dst_ids,
+                        jnp.asarray(sp[:, src_list]))
+                else:
+                    self.pools[str(i)][part] = copy_kv_blocks(
+                        self.pools[str(i)][part], sp, src_ids, dst_ids)
+
+    def read_blocks(self, blocks: Iterable[int]) -> Dict[str, dict]:
+        """Gather whole pages into host (numpy) arrays — the staging read
+        of a swap-out or host demotion.  Layout mirrors the pools:
+        {layer: {"k"/"v": (nb, n, page, KVH, D)}}, consumable by
+        ``kv_offload.HostKVPool.store``."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import gather_kv_blocks
+        ids = jnp.asarray(list(blocks), jnp.int32)
+        return {str(i): {part: np.asarray(gather_kv_blocks(
+                    self.pools[str(i)][part], ids))
+                for part in ("k", "v")}
+                for i in self.attn_layers}
 
     def copy_within(self, src_block: int, dst_block: int) -> None:
         """Duplicate one page inside the pool — the physical half of a

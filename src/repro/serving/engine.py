@@ -26,9 +26,17 @@ is ever materialised.  Blocks are allocated **grow-on-demand**: admission
 commits only the prefilled KV's pages, each decode tick extends
 allocations as sequences cross page boundaries, and on pool exhaustion (or
 when free blocks fall under ``preempt_watermark``) the engine preempts the
-newest-arrival resident — recompute-style: its blocks are dropped and the
-generated prefix is re-prefilled through the normal CDSP plan/requeue
-path, token-for-token identical to the uninterrupted run.
+newest-arrival resident.  What preemption *does* is the ``preempt_policy``
+knob (serving/kv_offload.py): **swap** parks the victim's pages in a
+host-memory tier and swaps them back when the pool has room (resuming
+token-for-token with zero recomputed FLOPs), **recompute** drops the
+blocks and re-prefills the generated prefix through the normal CDSP
+plan/requeue path (also token-for-token identical), and **auto** (default)
+compares the modeled PCIe swap-in time against the modeled re-prefill time
+per victim.  The host pool doubles as an LRU **second-tier prefix cache**:
+hash-published blocks are demoted there when their last device reference
+dies, and admissions whose chained hashes match promote the pages back —
+prefix sharing survives eviction.
 
 **Prefix sharing + copy-on-write** (``prefix_sharing=True``): admission
 matches the longest prefix of the incoming tokens against resident
@@ -59,6 +67,7 @@ on that combination; see ROADMAP).
 
 from __future__ import annotations
 
+import functools
 import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -69,12 +78,15 @@ import numpy as np
 
 from repro.core.cdsp import prefill_chunk_paged
 from repro.core.improvement_rate import DynamicRateController
-from repro.core.latency_model import DecodeLatencyModel
+from repro.core.latency_model import DecodeLatencyModel, HostOffloadModel
 from repro.models.config import ModelConfig
 from repro.models.sharding import CPU_CTX, ExecContext
 from repro.models.transformer import forward
 from repro.serving.cache_manager import (BlockManager, PagedKVCache,
                                          block_hashes)
+from repro.serving.kv_offload import (HostKVPool, HostPrefixCache,
+                                      SwapManager, SwapRecord,
+                                      choose_preempt_policy)
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import ClusterSpec, Policy, Simulator
 from repro.serving.transfer import TransferManager
@@ -101,13 +113,16 @@ class _DecodeMeta:
     visible here without copying.  ``tokens`` records the token ids whose
     KV is resident — the content prefix-sharing admission matches against;
     ``shared_tokens`` is the capacity credit taken at admission (reversed
-    on evict)."""
+    on evict).  ``hashes`` carries the chained content hashes of the full
+    blocks published so far, so a block filling during decode extends the
+    chain in O(block_size) instead of rehashing the whole prefix."""
     row: int                            # batch row (stable while resident)
     cache_len: int                      # tokens resident in the paged pool
     last_token: int                     # next model input
     blocks: List[int] = field(default_factory=list)
     shared_tokens: int = 0              # prefix-sharing capacity credit
     tokens: List[int] = field(default_factory=list)
+    hashes: List[int] = field(default_factory=list)
 
 
 class PagedDecodeState:
@@ -310,6 +325,20 @@ class ServingEngine(Simulator):
     their prefill (``_prefill_backpressure``).  ``prefix_sharing=False``
     disables block reuse across requests (every admission copies all of
     its pages — the baseline the sharing tests compare against).
+
+    **Host offload tier** (serving/kv_offload.py): ``preempt_policy``
+    picks what a decode preemption does with the victim's KV —
+    ``"recompute"`` drops and re-prefills it (the pre-offload behaviour),
+    ``"swap"`` parks it in host memory and swaps it back when the pool
+    has room, and ``"auto"`` (the default) compares the modeled PCIe
+    swap-in time against the modeled re-prefill time per victim
+    (``choose_preempt_policy``; ``offload_model`` supplies the PCIe
+    term).  ``host_pool_blocks`` sizes the host tier (default: one decode
+    instance's worth; 0 disables it, forcing recompute).  The host pool
+    doubles as an LRU *second-tier prefix cache*: hash-published blocks
+    whose last device reference dies are demoted instead of lost, and a
+    later admission whose chained hashes match promotes the pages back
+    (``swap_stats`` surfaces the counters).
     """
 
     def __init__(self, cfg: ModelConfig, params: dict, spec: ClusterSpec,
@@ -320,14 +349,22 @@ class ServingEngine(Simulator):
                  rate_controller: Optional[DynamicRateController] = None,
                  preempt_watermark: float = 0.0,
                  prefill_pool_blocks: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 preempt_policy: str = "auto",
+                 host_pool_blocks: Optional[int] = None,
+                 offload_model: Optional[HostOffloadModel] = None):
         super().__init__(spec, policy, decode_model)
         assert spec.disaggregated, "real engine decode is disaggregated"
+        if preempt_policy not in ("auto", "swap", "recompute"):
+            raise ValueError(
+                f"preempt_policy must be 'auto', 'swap' or 'recompute', "
+                f"got {preempt_policy!r}")
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
         self.preempt_watermark = preempt_watermark
         self.prefix_sharing = prefix_sharing
+        self.preempt_policy = preempt_policy
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.chunk_log: Dict[int, List[dict]] = {}
@@ -346,6 +383,30 @@ class ServingEngine(Simulator):
                                     block_size=block_size)
         self.pkv = PagedKVCache(cfg, prefill_pool_blocks, block_size,
                                 dtype=cfg.dtype)
+        # host offload tier: numpy mirror pool shared by swap records and
+        # the LRU second-tier prefix cache; demotions hook BlockManager
+        # releases per decode instance
+        if host_pool_blocks is None:
+            host_pool_blocks = max_batch * max_seq // block_size
+        if host_pool_blocks > 0:
+            self.host = HostKVPool(cfg, host_pool_blocks, block_size,
+                                   dtype=cfg.dtype)
+            self.host_cache = HostPrefixCache(self.host)
+            self.swap = SwapManager(self.host,
+                                    offload_model or HostOffloadModel(),
+                                    spec.kv_bytes_per_token)
+            for did, d in enumerate(self.dstates):
+                d.blocks.demote_cb = functools.partial(
+                    self._demote_block, did)
+        else:
+            if preempt_policy == "swap":
+                raise ValueError(
+                    "preempt_policy='swap' needs a host tier; set "
+                    "host_pool_blocks > 0")
+            self.host = None
+            self.host_cache = None
+            self.swap = None
+        self._suppress_demote = False       # during swap-out evictions
         self._prefill: Dict[int, _PrefillState] = {}
         self._preempt_flags: set = set()          # mid-prefill
         self._decode_preempt_flags: set = set()   # decode, at next tick
@@ -403,13 +464,17 @@ class ServingEngine(Simulator):
         cancelled and the remainder of the prompt is re-planned (requeued)
         under the then-current load.  DECODE — or TRANSFER, honoured once
         the request has joined a decode batch: at the instance's next
-        decode tick the request is evicted (blocks released) and its
-        generated prefix is re-prefilled — recompute preemption,
-        token-for-token identical after resume.  With ``at`` the flag is
+        decode tick the request is evicted via the engine's
+        ``preempt_policy`` — swapped to the host tier, or recompute-style
+        (blocks released, generated prefix re-prefilled) — token-for-token
+        identical after resume either way.  With ``at`` the flag is
         set by an event at that virtual time; without it the flag applies
-        immediately (e.g. before serve()).  The engine also preempts
-        automatically on block exhaustion / watermark — no manual call
-        needed."""
+        immediately (e.g. before serve()).  A SWAPPED request is already
+        preempted — its KV sits on the host and its device footprint is
+        zero — so flagging it is deliberately a no-op (re-flagging would
+        only thrash the swap-in it is waiting on).  The engine also
+        preempts automatically on block exhaustion / watermark — no
+        manual call needed."""
         if at is not None:
             self._push(at, "preempt", rid)
             return
@@ -612,6 +677,12 @@ class ServingEngine(Simulator):
         # resident prefix, then reserve only the tokens that need FRESH
         # blocks — decode growth is paid per tick, with preemption (not
         # over-reservation) covering exhaustion
+        row = d.free_slot()
+        if row is None:
+            # no batch row: retry shortly without paying for the share
+            # plan (hashing + per-resident token compares) on every poll
+            self._push(now + 0.05, "transfer_done", rid)
+            return
         resident = self._prefill[rid].off
         seq = np.asarray(self._prefill_seq(rid)[:resident])
         hashes = (block_hashes(seq, d.block_size) if self.prefix_sharing
@@ -619,9 +690,7 @@ class ServingEngine(Simulator):
         shared, shared_tok = (d.plan_share(seq, hashes)
                               if self.prefix_sharing else ([], 0))
         fresh = d.blocks.blocks_for(resident) - len(shared)
-        row = d.free_slot()
-        if row is None or not d.blocks.reserve_virtual(
-                rid, fresh * d.block_size):
+        if not d.blocks.reserve_virtual(rid, fresh * d.block_size):
             # decode instance saturated: hold the backend, retry shortly
             # (a failed reserve leaves no virtual entry behind; the share
             # plan is recomputed from scratch on the retry)
@@ -630,15 +699,31 @@ class ServingEngine(Simulator):
         d.transfers.complete(rid)
         st = self._prefill.pop(rid)
         blocks = d.blocks.commit(rid, shared=shared)
+        # second-tier prefix cache: past the device-resident match (full
+        # blocks only — a shared partial tail ends the chain), continue
+        # the hash chain through demoted host pages and promote the hits
+        # back page-granularly instead of copying from the prefill pool
+        promo: List[int] = []
+        if (self.prefix_sharing and self.host_cache is not None
+                and len(shared) * d.block_size == shared_tok):
+            promo = self.host_cache.match_chain(
+                hashes[len(shared):], seq, len(shared), d.block_size)
         # page-granular handoff: only the non-shared suffix pages move
         # from the prefill pool; the shared prefix is served in place by
         # the sibling's pages.  No dense per-request KV view exists.
+        if promo:
+            d.kv.copy_from(self.host, promo,
+                           blocks[len(shared):len(shared) + len(promo)])
+            d.transfers.note_swap("promote", TransferManager.swap_bytes(
+                len(promo), d.block_size, self.spec.kv_bytes_per_token))
+        skip = len(shared) + len(promo)
         src = self.pblocks.allocs[rid]
-        d.kv.copy_from(self.pkv, src[len(shared):], blocks[len(shared):])
+        d.kv.copy_from(self.pkv, src[skip:], blocks[skip:])
         if self.prefix_sharing:
-            d.blocks.register_hashes(rid, hashes)
+            d.blocks.register_hashes(rid, hashes, tokens=seq)
         d.insert(row, rid, st.aux, resident, self.outputs[rid][-1],
                  blocks, shared_tok, seq)
+        d.meta[rid].hashes = list(hashes)     # chain seed for decode growth
         self.pblocks.release(rid)
         super()._on_transfer_done(now, rid)
         inst = self.decodes[req.decode_instance]
@@ -657,21 +742,70 @@ class ServingEngine(Simulator):
     def _watermark_blocks(self, d: PagedDecodeState) -> int:
         return int(np.ceil(self.preempt_watermark * d.blocks.total_blocks))
 
+    def _preempt_choice(self, d: PagedDecodeState, rid: int) -> tuple:
+        """Resolve the preemption policy for one victim.
+
+        Returns ``(policy, swap_in_ms, recompute_ms, resume_tokens)``:
+        under ``auto`` the modeled PCIe swap-in time of the victim's
+        resident pages is compared against the modeled re-prefill time of
+        its resume sequence (kv_offload.choose_preempt_policy); explicit
+        ``swap`` / ``recompute`` short-circuit the compare but still
+        report both costs so ``preempt_log`` lets benchmarks audit the
+        decision.  ``resume_tokens`` is the length the recompute cost was
+        priced on — exactly what a recompute preemption re-prefills."""
+        req = self.reqs[rid]
+        outs = self.outputs[rid]
+        resume = req.prompt_len + (len(outs) - 1 if len(outs) > 1 else 0)
+        if self.swap is None:
+            return "recompute", float("inf"), 0.0, resume
+        policy, swap_ms, rec_ms = choose_preempt_policy(
+            len(d.meta[rid].blocks), d.block_size,
+            self.spec.kv_bytes_per_token, resume,
+            self.policy.model, self.swap.model)
+        if self.preempt_policy != "auto":
+            policy = self.preempt_policy
+        return policy, swap_ms, rec_ms, resume
+
     def _preempt_decode(self, now: float, rid: int, reason: str) -> None:
-        """Recompute-preempt a decode-resident request: release its blocks,
-        leave the continuous batch, and requeue the full generated prefix
-        (prompt + emitted tokens) through the normal CDSP plan path.  The
-        emitted tokens are restored verbatim when the re-prefill completes
-        (greedy decoding is deterministic), so generation is token-for-token
-        identical to an unpreempted run."""
+        """Preempt a decode-resident request under memory pressure (or a
+        manual flag), via the policy-chosen mechanism:
+
+        * **swap**: the victim's pages move to the host tier and its
+          decode state is parked (``_swap_out``); it swaps back in and
+          resumes token-for-token once the pool has room — no prefill
+          FLOPs are burnt.
+        * **recompute**: release its blocks, leave the continuous batch,
+          and requeue the full generated prefix (prompt + emitted tokens)
+          through the normal CDSP plan path.  The emitted tokens are
+          restored verbatim when the re-prefill completes (greedy
+          decoding is deterministic), so generation is token-for-token
+          identical to an unpreempted run — this is also the fallback
+          when the host tier cannot hold the victim.
+
+        Every event logs the chosen ``policy`` and both modeled costs
+        (``swap_in_ms`` / ``recompute_ms``) so the ``auto`` decision is
+        auditable."""
         req = self.reqs[rid]
         did = req.decode_instance
         d, inst = self.dstates[did], self.decodes[did]
         outs = self.outputs[rid]
-        self.preempt_log.append({
+        policy, swap_ms, rec_ms, resume = self._preempt_choice(d, rid)
+        entry = {
             "t": now, "rid": rid, "instance": did, "reason": reason,
+            "policy": policy, "swap_in_ms": swap_ms,
+            "recompute_ms": rec_ms, "resume_tokens": 0,
             "free_blocks": d.blocks.n_free, "generated": len(outs),
-            "chunks_discarded": len(req.chunk_plan or [])})
+            "chunks_discarded": 0}
+        if policy == "swap":
+            if self._swap_out(now, rid):
+                self.preempt_log.append(entry)
+                return
+            # host tier full of pinned swap records: recompute fallback
+            entry["policy"] = "recompute"
+            self.swap.counters["fallback_recompute"] += 1
+        entry["resume_tokens"] = resume
+        entry["chunks_discarded"] = len(req.chunk_plan or [])
+        self.preempt_log.append(entry)
         meta = d.evict(rid)
         if meta.shared_tokens:
             inst.debit_shared(meta.shared_tokens)
@@ -701,6 +835,186 @@ class ServingEngine(Simulator):
         self._prefill[rid] = _PrefillState()
         self._push(now, "requeue", rid)
 
+    # ----------------------------------------------------- host swap tier
+    def _demote_block(self, did: int, block: int, h: int,
+                      tokens: tuple) -> None:
+        """BlockManager demote hook: a hash-published block's last device
+        reference died — copy its page into the host prefix cache before
+        the block can be reallocated, so the prefix stays matchable.
+        Suppressed during swap-out evictions (the SwapManager already
+        holds the victim's full copy and will restore + republish it)."""
+        if self.host_cache is None or self._suppress_demote:
+            return
+        if h in self.host_cache.entries:
+            self.host_cache.put(h, tokens, {})    # LRU refresh, no copy
+            return
+        if self.host.n_free == 0 and not self.host_cache.entries:
+            # pool fully pinned by swap records: the put below could only
+            # reject — skip the device->host page gather entirely
+            self.host_cache.stats["rejected"] += 1
+            return
+        d = self.dstates[did]
+        if self.host_cache.put(h, tokens, d.kv.read_blocks([block])):
+            d.transfers.note_swap("demote", TransferManager.swap_bytes(
+                1, d.block_size, self.spec.kv_bytes_per_token))
+
+    def _swap_out(self, now: float, rid: int) -> bool:
+        """Move a victim's resident KV pages to the host tier and park its
+        decode state (kv_offload.SwapRecord).  False when the host pool
+        cannot hold the pages even after shrinking the prefix cache (the
+        caller falls back to recompute).  The PCIe write is an event: the
+        swap completes at ``now + swap_time`` while decode ticks keep
+        running — transfers overlap compute on the event clock."""
+        req = self.reqs[rid]
+        did = req.decode_instance
+        d, inst = self.dstates[did], self.decodes[did]
+        m = d.meta[rid]
+        n = len(m.blocks)
+        if self.host.n_free + len(self.host_cache) < n:
+            return False       # eviction could never free enough: don't
+        #                        wipe the prefix cache for a doomed swap
+        hblocks = self.host.alloc(n)
+        if hblocks is None:
+            self.host_cache.evict_until(n)   # swap beats cached prefixes
+            hblocks = self.host.alloc(n)
+        assert hblocks is not None, "host pool accounting violated"
+        self.host.store(hblocks, d.kv.read_blocks(m.blocks))
+        aux = d.aux.get(rid)
+        self._suppress_demote = True
+        try:
+            meta = d.evict(rid)
+        finally:
+            self._suppress_demote = False
+        if meta.shared_tokens:
+            inst.debit_shared(meta.shared_tokens)
+        for r in inst.batch:
+            if r.rid == rid:
+                inst.batch.remove(r)
+                break
+        inst.swap_out(req, meta.cache_len)
+        req.preemptions += 1
+        req.phase = Phase.SWAPPED
+        self._decode_preempt_flags.discard(rid)
+        self.swap.records[rid] = SwapRecord(
+            rid=rid, did=did, host_blocks=hblocks,
+            cache_len=meta.cache_len, last_token=meta.last_token,
+            tokens=meta.tokens, aux=aux)
+        n_bytes = self.swap.block_bytes(n)
+        self.swap.counters["swap_outs"] += 1
+        self.swap.counters["bytes_out"] += n_bytes
+        d.transfers.note_swap("out", n_bytes)
+        self._push(now + self.swap.model.swap_time(n_bytes),
+                   "swap_out_done", rid)
+        return True
+
+    def _on_swap_out_done(self, now: float, rid: int) -> None:
+        """The PCIe write retired; start trying to come back (capacity may
+        already exist — e.g. the pressure came from a burst that drained)."""
+        self._on_swap_in_try(now, rid)
+
+    def _on_swap_in_try(self, now: float, rid: int) -> None:
+        """Claim a batch row + a block reservation for a parked request;
+        retries until the instance has room above the watermark.  The
+        reservation (BlockManager.reserve_virtual) spans the PCIe flight,
+        and resident growth honours it (``extend`` subtracts virtual
+        blocks) — but may reclaim it via ``_cancel_pending_swap_ins`` when
+        the pool tightens, sending this request back to retrying."""
+        rec = self.swap.records[rid]
+        req = self.reqs[rid]
+        d, inst = self.dstates[rec.did], self.decodes[rec.did]
+        need = d.blocks.blocks_for(rec.cache_len)
+        # land only with watermark headroom to spare (capped at the pool:
+        # an empty instance must always be able to take its request back)
+        floor = min(need + self._watermark_blocks(d), d.blocks.total_blocks)
+        row = d.free_slot()
+        if (row is None
+                or d.blocks.n_free - d.blocks.virtual_blocks < floor
+                or not d.blocks.reserve_virtual(
+                    rid, need * d.block_size)):
+            self._push(now + 0.05, "swap_in_try", rid)
+            return
+        d.slots[row] = rid                  # claim the row (meta at landing)
+        rec.row = row
+        inst.swap_in_start(req, rec.cache_len)
+        n_bytes = self.swap.block_bytes(len(rec.host_blocks))
+        self.swap.counters["bytes_in"] += n_bytes
+        d.transfers.note_swap("in", n_bytes)
+        self._push(now + self.swap.model.swap_time(n_bytes),
+                   "swap_in_done", rid)
+
+    def _on_swap_in_done(self, now: float, rid: int) -> None:
+        """Swap-in landed: commit the reserved blocks, scatter the host
+        pages back into the pool, rebuild the decode meta and rejoin the
+        continuous batch — cache_len/last_token/outputs are exactly what
+        they were at swap-out, so generation resumes token-for-token."""
+        rec = self.swap.records[rid]
+        if rec.row is None:
+            # reservation was reclaimed by resident growth mid-flight
+            self._on_swap_in_try(now, rid)
+            return
+        req = self.reqs[rid]
+        d, inst = self.dstates[rec.did], self.decodes[rec.did]
+        del self.swap.records[rid]
+        blocks = d.blocks.commit(rid)
+        d.kv.copy_from(self.host, rec.host_blocks, blocks)
+        self.host.free(rec.host_blocks)
+        d.insert(rec.row, rid, rec.aux, rec.cache_len, rec.last_token,
+                 blocks, 0, rec.tokens)
+        if self.prefix_sharing:
+            # republish the full blocks so sharing (and demotability)
+            # survive the round trip; shared-capacity credit restarts at 0
+            hashes = block_hashes(np.asarray(rec.tokens), d.block_size)
+            d.blocks.register_hashes(rid, hashes, tokens=rec.tokens)
+            d.meta[rid].hashes = hashes
+        inst.swap_in_done(req, rec.cache_len)
+        self.swap.counters["swap_ins"] += 1
+        req.phase = Phase.DECODE
+        inst.batch.append(req)
+        if not inst.ticking:
+            inst.ticking = True
+            self._push(now, "decode_tick", rec.did)
+
+    def _cancel_pending_swap_ins(self, did: int) -> bool:
+        """Reclaim the block reservation held by ONE in-flight swap-in of
+        instance ``did`` so a resident can grow NOW; the swapped request
+        drops back to the retry loop (its ``swap_in_done`` sees the
+        cleared row).  One at a time: the caller re-checks after each
+        reclaim, so other in-flight swap-ins keep their reservation (and
+        avoid re-paying the PCIe transfer) when one was enough.  Returns
+        True if anything was reclaimed."""
+        if self.swap is None:
+            return False
+        d, inst = self.dstates[did], self.decodes[did]
+        for rid, rec in self.swap.records.items():
+            if rec.did == did and rec.row is not None:
+                d.slots[rec.row] = None
+                rec.row = None
+                d.blocks.virtual_tokens.pop(rid, None)
+                inst.swap_in_cancel(self.reqs[rid], rec.cache_len)
+                return True
+        return False
+
+    @property
+    def swap_stats(self) -> Dict[str, float]:
+        """Host-offload tier counters: swap round trips and bytes, parked
+        requests, recompute fallbacks, host pool occupancy, and the
+        second-tier prefix cache's demotions/hits/evictions."""
+        out = {"swap_outs": 0, "swap_ins": 0, "bytes_out": 0.0,
+               "bytes_in": 0.0, "fallback_recompute": 0, "swapped_now": 0,
+               "host_blocks_in_use": 0, "host_peak_blocks": 0,
+               "demotions": 0, "host_prefix_hits": 0, "cache_evictions": 0}
+        if self.swap is None:
+            return out
+        out.update(self.swap.counters)
+        out["swapped_now"] = len(self.swap.records)
+        out["host_blocks_in_use"] = (self.host.total_blocks
+                                     - self.host.n_free)
+        out["host_peak_blocks"] = self.host.peak_in_use
+        out["demotions"] = self.host_cache.stats["demotions"]
+        out["host_prefix_hits"] = self.host_cache.stats["hits"]
+        out["cache_evictions"] = self.host_cache.stats["evictions"]
+        return out
+
     def _grow_or_preempt(self, now: float, did: int) -> None:
         """Before a decode step: honour manual decode-preempt flags, then
         make every resident's append target writable — extend allocations
@@ -709,19 +1023,22 @@ class ServingEngine(Simulator):
         references.  Both need free blocks; growth is granted
         oldest-arrival first, and when it would exhaust the pool (or dip
         under the watermark while a victim exists) the newest-arrival
-        resident is recompute-preempted until the step fits.  A lone
-        resident may always grow — submit() bounds its worst case to the
-        pool, it can need no CoW (nobody shares with it), and preempting
-        it could never help."""
+        resident is preempted — swap or recompute per the engine's
+        ``preempt_policy`` — until the step fits.  Before any victim
+        falls, block reservations held by in-flight swap-ins are
+        reclaimed (the swapped request just retries later — cheaper than
+        preempting anyone).  A lone resident may always grow — submit()
+        bounds its worst case to the pool, it can need no CoW (nobody
+        shares with it), and preempting it could never help."""
         d = self.dstates[did]
         bm = d.blocks
         for rid in [r for r in d.slots
-                    if r is not None and r in self._decode_preempt_flags]:
+                    if r is not None and r in d.meta
+                    and r in self._decode_preempt_flags]:
             self._decode_preempt_flags.discard(rid)
             self._preempt_decode(now, rid, reason="manual")
         wm = self._watermark_blocks(d)
-        order = sorted((r for r in d.slots if r is not None),
-                       key=lambda r: (self.reqs[r].arrival, r))
+        order = sorted(d.meta, key=lambda r: (self.reqs[r].arrival, r))
         for rid in order:
             if rid not in d.meta:
                 continue                   # became a victim this tick
@@ -735,9 +1052,15 @@ class ServingEngine(Simulator):
                 need = grow or (1 if cow else 0)
                 if need == 0:
                     break
-                resident = [r for r in d.slots if r is not None]
+                resident = [r for r in d.slots
+                            if r is not None and r in d.meta]
                 floor = wm if len(resident) > 1 else 0
-                if len(resident) <= 1 or bm.n_free - need >= floor:
+                # growth sees only blocks not promised to an in-flight
+                # swap-in; reclaim those reservations before anyone falls
+                eff = bm.n_free - bm.virtual_blocks
+                if eff - need < floor and self._cancel_pending_swap_ins(did):
+                    continue
+                if len(resident) <= 1 or eff - need >= floor:
                     # a lone resident may dip below the watermark; its
                     # worst case is pool-bounded by submit(), so a failed
                     # extend here is an accounting bug, not a full pool
@@ -753,14 +1076,16 @@ class ServingEngine(Simulator):
                              key=lambda r: (self.reqs[r].arrival, r))
                 self._preempt_decode(
                     now, victim,
-                    reason="exhaustion" if bm.n_free < need else "watermark")
+                    reason="exhaustion" if eff < need else "watermark")
                 if victim == rid:
                     break
 
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
         self._grow_or_preempt(now, did)
-        active = [r for r in d.slots if r is not None]
+        # rows claimed by an in-flight swap-in have no meta yet: the KV is
+        # still crossing PCIe, so they sit this tick out
+        active = [r for r in d.slots if r is not None and r in d.meta]
         if active:
             B = d.max_batch
             toks = np.zeros((B, 1), np.int32)
@@ -786,6 +1111,16 @@ class ServingEngine(Simulator):
                 m.last_token = int(nxt[m.row])
                 m.cache_len += 1
                 self.outputs[r].append(int(nxt[m.row]))
+                if self.prefix_sharing and m.cache_len % d.block_size == 0:
+                    # a block filled *during decode*: extend the chained
+                    # hash by just this block and publish it, so
+                    # decode-grown prefixes are shareable by twin
+                    # admissions and demotable to the host tier
+                    bs = d.block_size
+                    prev = m.hashes[-1] if m.hashes else 0
+                    blk = m.tokens[len(m.hashes) * bs:m.cache_len]
+                    m.hashes.append(hash((prev,) + tuple(blk)))
+                    d.blocks.register_hashes(r, m.hashes, tokens=m.tokens)
         # virtual-time bookkeeping + token accounting via the parent
         inst = self.decodes[did]
         finished_before = {r.rid for r in inst.batch

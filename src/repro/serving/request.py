@@ -13,6 +13,10 @@ class Phase(enum.Enum):
     TRANSFER = 2
     DECODE = 3
     DONE = 4
+    # swap-preempted: KV parked in the host offload tier, waiting to swap
+    # back into a decode instance (serving/kv_offload.py) — unlike a
+    # recompute preemption the request does NOT re-enter QUEUED/PREFILL
+    SWAPPED = 5
 
 
 @dataclass

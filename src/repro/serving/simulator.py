@@ -187,11 +187,24 @@ class DecodeInstance:
     tokens (the block-exact truth lives in BlockManager.n_free — decode-
     side exhaustion preemption covers the gap).  ``shared_tokens`` gauges
     the live credit.
+
+    **Host swap tier** (real engine only): a swap-preempted resident
+    leaves the device without giving up its request — ``swap_out`` frees
+    its resident tokens and drops its ungrown commitment exactly like a
+    recompute eviction, but the gauge ``swapped_tokens`` remembers the
+    KV lives on the host and will return.  When the swap-in goes on the
+    PCIe wire, ``swap_in_start`` books the returning tokens as virtual so
+    routing cannot hand the freed space away twice mid-flight
+    (``swap_in_flight`` gauges the transit); ``swap_in_done`` converts
+    the commitment back into residency.  All three are exact inverses,
+    so the books drain to zero however swaps interleave.
     """
     did: int
     slots_free: int
     virtual: int = 0                       # in-flight + ungrown commitments
     shared_tokens: int = 0                 # live prefix-sharing credit
+    swapped_tokens: int = 0                # KV tokens parked on the host
+    swap_in_flight: int = 0                # KV tokens crossing PCIe (in)
     batch: List[Request] = field(default_factory=list)
     ticking: bool = False
     backends_free: int = 8
@@ -211,6 +224,38 @@ class DecodeInstance:
         release credited tokens that never consumed capacity)."""
         self.slots_free -= tokens
         self.shared_tokens -= tokens
+
+    # ------------------------------------------------- host swap accounting
+    def swap_out(self, req: Request, cache_tokens: int) -> None:
+        """A swap-preempted resident leaves the device: resident tokens
+        free up, the ungrown remainder stops being a commitment while the
+        request is away, and ``swapped_tokens`` remembers it will be
+        back."""
+        self.slots_free += req.prompt_len + req.generated
+        self.virtual -= req.output_len - req.generated
+        self.swapped_tokens += cache_tokens
+
+    def swap_in_start(self, req: Request, cache_tokens: int) -> None:
+        """The swap-in goes on the wire: its resident-to-be tokens become
+        a virtual commitment (like a prefill transfer's) so admission and
+        routing see the space as spoken for during the PCIe flight."""
+        self.virtual += req.prompt_len + req.generated
+        self.swap_in_flight += cache_tokens
+
+    def swap_in_cancel(self, req: Request, cache_tokens: int) -> None:
+        """Reverse ``swap_in_start``: a resident's growth reclaimed the
+        reservation; the swapped request goes back to waiting."""
+        self.virtual -= req.prompt_len + req.generated
+        self.swap_in_flight -= cache_tokens
+
+    def swap_in_done(self, req: Request, cache_tokens: int) -> None:
+        """Swap-in landed: the wire commitment becomes residency again —
+        the exact inverse of ``swap_out`` + ``swap_in_start``."""
+        self.virtual -= req.prompt_len + req.generated
+        self.slots_free -= req.prompt_len + req.generated
+        self.virtual += req.output_len - req.generated
+        self.swapped_tokens -= cache_tokens
+        self.swap_in_flight -= cache_tokens
 
 
 class Simulator:

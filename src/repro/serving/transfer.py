@@ -52,6 +52,14 @@ class TransferManager:
             out[-1] += page_b                  # trailing partial page
         return out
 
+    @staticmethod
+    def swap_bytes(n_blocks: int, block_size: int,
+                   kv_bytes_per_token: float) -> float:
+        """Wire bytes of ``n_blocks`` whole pages crossing PCIe, one
+        direction — the unit of the host offload tier's swap-out/swap-in
+        and demote/promote moves (page-granular, like the NIC handoff)."""
+        return n_blocks * block_size * kv_bytes_per_token
+
     def __init__(self, n_backends: int, bandwidth: float = 40e9):
         self.n_backends = n_backends
         self.bandwidth = bandwidth
@@ -60,7 +68,29 @@ class TransferManager:
         self.waiting: List[int] = []          # rids ordered by 1st handshake
         self.active: Dict[int, int] = {}      # backend -> rid
         self.completed: List[int] = []
-        self.stats = {"handshakes": 0, "queued": 0, "transfers": 0}
+        self.stats = {"handshakes": 0, "queued": 0, "transfers": 0,
+                      # host offload tier PCIe traffic (bytes + moves):
+                      # out/in = swap preemption round trips, demote =
+                      # released hash blocks entering the host prefix
+                      # cache, promote = admission cache hits copied back
+                      "swap_out_bytes": 0.0, "swap_in_bytes": 0.0,
+                      "demote_bytes": 0.0, "promote_bytes": 0.0,
+                      "swaps_out": 0, "swaps_in": 0,
+                      "demotes": 0, "promotes": 0}
+
+    # ------------------------------------------------------- host offload
+    def note_swap(self, direction: str, n_bytes: float) -> None:
+        """Account one PCIe move of the host offload tier.  ``direction``
+        is ``"out"``/``"in"`` (swap preemption) or ``"demote"``/
+        ``"promote"`` (second-tier prefix cache); modeled as fully
+        overlapped with decode ticks, so only the bytes are recorded —
+        the swap *latency* lives on the engine's event clock."""
+        key = {"out": ("swap_out_bytes", "swaps_out"),
+               "in": ("swap_in_bytes", "swaps_in"),
+               "demote": ("demote_bytes", "demotes"),
+               "promote": ("promote_bytes", "promotes")}[direction]
+        self.stats[key[0]] += n_bytes
+        self.stats[key[1]] += 1
 
     # ---------------------------------------------------------- handshake
     def handshake(self, rid: int, n_chunks: int, chunk_bytes: List[float],

@@ -1,0 +1,263 @@
+"""Host KV offload tier: swap-to-host preemption resumes token-for-token,
+the ``auto`` policy's swap-vs-recompute cost compare, HostKVPool
+accounting/round-trip invariants, and the LRU second-tier host prefix
+cache (demote on release, promote on admission match)."""
+
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, strategies as st
+
+from conftest import generate_dense as _generate
+from repro.core.latency_model import (HostOffloadModel, PrefillLatencyModel,
+                                      SPCoeffs, table1_model)
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_offload import (HostKVPool, HostPrefixCache,
+                                      choose_preempt_policy)
+from repro.serving.request import Phase, Request
+from repro.serving.simulator import ClusterSpec
+from test_paged_engine import ParallelTwoChunkPolicy
+
+MODEL = table1_model()
+
+
+def _serve_batch(cfg, params, max_seq, *, n_req=3, prompt_len=60,
+                 output_len=12, watermark=0.0, **kw):
+    """The block-pressure scenario of test_paged_engine, with the host
+    offload knobs exposed."""
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=max_seq, block_size=16,
+                        preempt_watermark=watermark, **kw)
+    rng = np.random.default_rng(21)
+    for i in range(n_req):
+        req = Request(rid=i, arrival=i * 0.005, prompt_len=prompt_len,
+                      output_len=output_len)
+        eng.submit(req, rng.integers(0, cfg.vocab_size,
+                                     prompt_len).astype(np.int32))
+    eng.serve()
+    return eng
+
+
+def _assert_swap_drained(eng):
+    """All swap/accounting gauges return to baseline when the trace ends."""
+    bm = eng.dstates[0].blocks
+    assert bm.n_free == bm.total_blocks and not bm.allocs
+    assert not bm.virtual_tokens and not bm.tokens_of
+    inst = eng.decodes[0]
+    assert inst.slots_free == eng.spec.cache_slots
+    assert inst.swapped_tokens == 0 and inst.swap_in_flight == 0
+    st_ = eng.swap_stats
+    assert st_["swapped_now"] == 0
+    assert st_["swap_outs"] == st_["swap_ins"]
+    # only prefix-cache demotions may still occupy the host pool
+    assert st_["host_blocks_in_use"] == len(eng.host_cache)
+
+
+# ------------------------------------------------------ swap == unpressured
+def test_swap_preemption_bit_identical(reduced_params_cache):
+    """Block pressure with preempt_policy='swap': victims park their KV on
+    the host, swap back in, and finish with outputs token-for-token equal
+    to the unpressured run — with ZERO recomputed prefill tokens."""
+    cfg, params = reduced_params_cache("yi-9b")
+    calm = _serve_batch(cfg, params, max_seq=128,
+                        preempt_policy="recompute")
+    assert calm.preempt_log == []
+    tight = _serve_batch(cfg, params, max_seq=48, preempt_policy="swap")
+    assert tight.preempt_log, "pressure must preempt"
+    assert all(e["policy"] == "swap" for e in tight.preempt_log)
+    assert all(e["resume_tokens"] == 0 for e in tight.preempt_log)
+    # the modeled costs ride along for the auto-decision audit
+    for e in tight.preempt_log:
+        assert e["swap_in_ms"] > 0.0 and e["recompute_ms"] > 0.0
+    st_ = tight.swap_stats
+    assert st_["swap_outs"] >= 1 and st_["bytes_out"] > 0
+    assert st_["bytes_in"] >= st_["bytes_out"] > 0
+    # swapped requests never re-entered the prefill path
+    swapped = {e["rid"] for e in tight.preempt_log}
+    for rid in swapped:
+        assert len(tight.reqs[rid].chunk_plan) == 2, \
+            "swap must not discard/replan the original prefill chunks"
+        assert tight.reqs[rid].preemptions >= 1
+    for rid in calm.outputs:
+        assert tight.outputs[rid] == calm.outputs[rid], \
+            f"rid {rid} diverged across a host swap round trip"
+        assert tight.reqs[rid].done is not None
+        assert tight.reqs[rid].phase is Phase.DONE
+    _assert_swap_drained(tight)
+
+
+def test_auto_policy_end_to_end(reduced_params_cache):
+    """The auto knob follows the modeled costs: a free PCIe picks swap,
+    a glacial one picks recompute — outputs identical either way."""
+    cfg, params = reduced_params_cache("yi-9b")
+    calm = _serve_batch(cfg, params, max_seq=128,
+                        preempt_policy="recompute")
+    fast = _serve_batch(cfg, params, max_seq=48, preempt_policy="auto",
+                        offload_model=HostOffloadModel(pcie_bw=1e15,
+                                                       base=0.0))
+    assert fast.preempt_log
+    assert all(e["policy"] == "swap" for e in fast.preempt_log)
+    slow = _serve_batch(cfg, params, max_seq=48, preempt_policy="auto",
+                        offload_model=HostOffloadModel(pcie_bw=1e3,
+                                                       base=0.0))
+    assert slow.preempt_log
+    assert all(e["policy"] == "recompute" for e in slow.preempt_log)
+    assert slow.swap_stats["swap_outs"] == 0
+    for rid in calm.outputs:
+        assert fast.outputs[rid] == calm.outputs[rid]
+        assert slow.outputs[rid] == calm.outputs[rid]
+
+
+# ------------------------------------------------------- auto cost compare
+def test_auto_policy_cost_crossover():
+    """choose_preempt_policy under a synthetic latency model: short
+    prefixes recompute (prefill is near-free, PCIe ships real bytes);
+    long prefixes swap (quadratic re-prefill dwarfs the linear wire)."""
+    off = HostOffloadModel(pcie_bw=1e9, base=0.0)
+    pm = PrefillLatencyModel({1: SPCoeffs(a=0.0, b=1e-7, c=0.0, d=1e-8)})
+    bs, bpt = 16, 1024.0
+    pol, swap_ms, rec_ms = choose_preempt_policy(2, bs, bpt, 32, pm, off)
+    assert pol == "recompute" and rec_ms < swap_ms
+    n_blocks = 100_000 // bs
+    pol, swap_ms, rec_ms = choose_preempt_policy(n_blocks, bs, bpt,
+                                                 100_000, pm, off)
+    assert pol == "swap" and swap_ms < rec_ms
+    # both verdicts report both costs so preempt_log can audit them
+    assert swap_ms > 0.0 and rec_ms > 0.0
+
+
+def test_engine_rejects_bad_offload_config(reduced_params_cache):
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    pol = ParallelTwoChunkPolicy(MODEL, spec)
+    with pytest.raises(ValueError, match="preempt_policy"):
+        ServingEngine(cfg, params, spec, pol, preempt_policy="drop")
+    with pytest.raises(ValueError, match="host"):
+        ServingEngine(cfg, params, spec, pol, preempt_policy="swap",
+                      host_pool_blocks=0)
+
+
+# --------------------------------------------------- host pool invariants
+def _tiny_cfg(nb=2, kvh=2, dh=4):
+    return SimpleNamespace(
+        pattern=[SimpleNamespace(mixer="attn")],
+        n_blocks=nb, n_kv_heads=kvh, head_dim_=dh, dtype="float32")
+
+
+def _rand_pages(rng, cfg, n, page):
+    return {"0": {p: rng.standard_normal(
+        (cfg.n_blocks, n, page, cfg.n_kv_heads, cfg.head_dim_)
+        ).astype(np.float32) for p in ("k", "v")}}
+
+
+@settings(max_examples=20)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 4),
+                          st.integers(1, 3)),
+                min_size=1, max_size=40))
+def test_host_pool_roundtrip_property(ops):
+    """Random demote/promote-style alloc/store/load/free sequences: no
+    block is ever both free and held, nothing leaks or double-frees, and
+    every load returns exactly the bytes stored (round trip)."""
+    cfg = _tiny_cfg()
+    page, total = 4, 6
+    pool = HostKVPool(cfg, total_blocks=total, block_size=page)
+    rng = np.random.default_rng(99)
+    held = {}                                  # tag -> (blocks, data)
+    for kind, tag, n in ops:
+        if kind == 0 and tag not in held:      # swap-out / demote
+            data = _rand_pages(rng, cfg, n, page)
+            blocks = pool.alloc(n)
+            if blocks is None:
+                assert n > pool.n_free, "alloc refused despite room"
+            else:
+                pool.store(blocks, data)
+                held[tag] = (blocks, data)
+        elif kind == 1 and tag in held:        # swap-in / promote + free
+            blocks, data = held.pop(tag)
+            for part in ("k", "v"):
+                np.testing.assert_array_equal(
+                    pool.pools["0"][part][:, blocks], data["0"][part])
+            pool.free(blocks)
+        elif kind == 2 and tag in held:        # read-only promotion
+            blocks, data = held[tag]
+            for part in ("k", "v"):
+                np.testing.assert_array_equal(
+                    pool.pools["0"][part][:, blocks], data["0"][part])
+        free = pool.free_blocks
+        assert len(free) == len(set(free)), "double-free"
+        used = [b for bl, _ in held.values() for b in bl]
+        assert len(used) == len(set(used)), "block held twice"
+        assert not set(used) & set(free), "block both free and held"
+        assert pool.n_free + len(used) == pool.total_blocks, "leak"
+        assert pool.peak_in_use <= pool.total_blocks
+    for tag in list(held):
+        pool.free(held.pop(tag)[0])
+    assert pool.n_free == pool.total_blocks
+
+
+def test_host_prefix_cache_lru_and_verification():
+    """The cache evicts LRU under pressure, verifies token content on
+    match (hash() is not collision-proof), and match_chain stops at the
+    first miss."""
+    cfg = _tiny_cfg()
+    page = 4
+    pool = HostKVPool(cfg, total_blocks=2, block_size=page)
+    cache = HostPrefixCache(pool)
+    rng = np.random.default_rng(5)
+    toks = {h: [10 * h + j for j in range(page)] for h in (1, 2, 3)}
+    for h in (1, 2, 3):                        # 3 puts into a 2-block pool
+        assert cache.put(h, toks[h], _rand_pages(rng, cfg, 1, page))
+    assert len(cache) == 2 and cache.stats["evictions"] == 1
+    assert 1 not in cache.entries, "LRU entry must be the one evicted"
+    seq = np.asarray(toks[2] + toks[3])
+    assert len(cache.match_chain([2, 3], seq, 0, page)) == 2
+    # token mismatch on a matching hash must NOT hit (collision guard)
+    assert cache.match_chain([2], np.asarray([99] * page), 0, page) == []
+    # a broken chain stops the match
+    assert len(cache.match_chain([9, 3], seq, 0, page)) == 0
+    # swap-outs may shrink the cache to make room
+    cache.evict_until(2)
+    assert pool.n_free == 2 and len(cache) == 0
+
+
+# --------------------------------------------- second-tier prefix survival
+def test_host_prefix_cache_hit_after_eviction(reduced_params_cache):
+    """Prefix sharing must survive eviction: request A finishes and its
+    hash-published blocks demote to the host tier; a twin B arriving
+    AFTER A left the device promotes them back (page-granular copy-back)
+    and decodes bit-identically to a solo run."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    rng = np.random.default_rng(61)
+    prompt = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+
+    def engine():
+        return ServingEngine(cfg, params, spec,
+                             ParallelTwoChunkPolicy(MODEL, spec),
+                             max_batch=4, max_seq=256, block_size=16)
+
+    solo = engine()
+    solo.submit(Request(rid=0, arrival=0.0, prompt_len=48, output_len=6),
+                prompt)
+    solo_out = solo.serve()
+    a_done = solo.reqs[0].done
+
+    eng = engine()
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=48, output_len=6),
+               prompt)
+    eng.submit(Request(rid=1, arrival=a_done + 0.5, prompt_len=48,
+                       output_len=6), prompt.copy())
+    outs = eng.serve()
+    assert eng.reqs[1].arrival > eng.reqs[0].done, \
+        "B must arrive after A fully left the device"
+    st_ = eng.swap_stats
+    assert st_["demotions"] >= 3, "A's 3 full blocks must demote on release"
+    assert st_["host_prefix_hits"] >= 3, \
+        "B's admission must promote the demoted chain from the host tier"
+    assert eng.dstates[0].transfers.stats["promotes"] >= 1
+    assert eng.dstates[0].transfers.stats["promote_bytes"] > 0
+    assert outs[0] == outs[1] == solo_out[0], \
+        "promoted host pages must decode bit-identically"

@@ -110,6 +110,42 @@ def test_cow_divergent_suffix_never_corrupts_sibling(reduced_params_cache):
     _assert_drained(shared)
 
 
+def test_decode_grown_blocks_shared_mid_decode(reduced_params_cache):
+    """Blocks that fill *during decode* are chain-hashed and published:
+    a second request whose prompt extends a resident twin's prompt with
+    its generated tokens must share those decode-grown blocks at
+    admission (shared count beyond the admission-published prompt
+    blocks), and both decode exactly their solo outputs."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    # A's prompt = 4 full blocks of 8; after 8+ decode ticks block 4
+    # (tokens 32..39) fills and must be published mid-decode
+    solo_a, outs_a = _serve(cfg, params, [(0, 0.0, prompt, 48)],
+                            block_size=8)
+    tt = solo_a.reqs[0].token_times
+    pb = np.concatenate([prompt,
+                         np.asarray(outs_a[0][:8], prompt.dtype)])
+    solo_b, outs_b = _serve(cfg, params, [(1, 0.0, pb, 6)], block_size=8)
+    # aim B's admission at roughly A's 12th decode tick: subtract B's own
+    # measured submit->admission delay so the plan/transfer time cancels
+    delay = solo_b.reqs[1].transfer_done - solo_b.reqs[1].arrival
+    arrival = max(1e-3, tt[12] - delay)
+    shared, outs = _serve(cfg, params,
+                          [(0, 0.0, prompt, 48), (1, arrival, pb, 6)],
+                          block_size=8)
+    # scenario preconditions: B joined while A was mid-decode with its
+    # 5th block (the decode-grown one) already full
+    assert shared.reqs[1].transfer_done < shared.reqs[0].done
+    bm = shared.dstates[0].blocks
+    assert bm.stats["shared"] >= 5, \
+        "4 prompt blocks + >=1 decode-grown block must be shared"
+    assert outs[0] == outs_a[0], "twin A diverged"
+    assert outs[1] == outs_b[1], \
+        "B sharing a decode-grown block diverged from its solo run"
+    _assert_drained(shared)
+
+
 # ------------------------------------- admission is dense-free + oracle match
 def test_admission_flow_has_no_dense_kv_tree():
     """The engine's admission/transfer flow must not materialise a dense
