@@ -1,0 +1,44 @@
+"""Version shims for the narrow set of JAX APIs whose home has moved.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (keyword
+``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``).  Every
+shard_map island in this repo goes through this wrapper so both API
+generations run the multi-device tests (tests/dist_progs, the CI
+multi-device CPU job) unchanged.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_mesh(shape, axis_names):
+    """Build a Mesh over the first prod(shape) devices — the portable
+    spelling of ``jax.make_mesh(shape, names, axis_types=Auto)`` (the
+    ``axis_types`` keyword does not exist on older jax; Auto is the
+    default either way)."""
+    import numpy as np
+    n = math.prod(shape)
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape),
+                             axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager entering ``mesh``: ``jax.set_mesh`` where it
+    exists, the legacy ``with mesh:`` context otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:                                     # jax < 0.6: experimental home
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)

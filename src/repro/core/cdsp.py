@@ -6,12 +6,17 @@ automatic via position arrays) plus its own causal self-attention, and SSD
 state / conv windows are handed across chunks.  Numerically this equals
 monolithic prefill bit-for-bit (tests/test_cdsp.py).
 
-In the distributed engine each chunk runs on a (nested) instance group; the
-history dict handed to the next chunk is simply re-sharded over the larger
-group — that re-shard IS the paper's "cache balancing" step (a DMA reshard
-on TPU), and the layer-wise overlap of Sec. 4.1 corresponds to XLA's
-latency-hiding scheduler overlapping the reshard collective with the FC
-compute of the adjacent layers.
+In the distributed engine each chunk runs on a (nested) instance group.
+The serving engine's chunks keep their history in *paged* pools
+(``prefill_chunk_paged``), and under ring attention the pool is sharded
+over the SP axis with each shard's history pages rotating through the
+ring (core/ring_attention.ring_paged_prefill) — distributed chunks no
+longer fall back to the dense history tree.  The dense
+``prefill_chunk``/``_append_history`` path remains as the library oracle:
+its history re-shard over a larger group IS the paper's "cache balancing"
+step (a DMA reshard on TPU), and the layer-wise overlap of Sec. 4.1
+corresponds to XLA's latency-hiding scheduler overlapping the reshard
+collective with the FC compute of the adjacent layers.
 """
 
 from __future__ import annotations
@@ -118,6 +123,13 @@ def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
     layer scan can slice one page-set per block — the per-layer slice is
     exactly the {"k_pool","v_pool","block_table","len"} paged history
     consumed by models/attention.py (ops.paged_prefill_attention).
+
+    Sequence-parallel sharded pools (PagedKVCache with ``kv_shards > 1``,
+    per-layer leaves (nb, n_shards, blocks_per_shard + 1, page, KVH, D))
+    are detected from the leaf rank: the global striped block ids are
+    converted to the per-shard local tables (nb, n_shards, B, npg_local)
+    that the ring-paged prefill island consumes
+    (core/ring_attention.ring_paged_prefill).
     """
     out: dict = {}
     bt_b = ln_b = None
@@ -127,11 +139,25 @@ def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
         ent: dict = {}
         if spec.mixer == "attn":
             if bt_b is None:
-                bt = jnp.asarray(block_table, jnp.int32)
-                if bt.ndim == 1:
-                    bt = bt[None]                       # (B=1, npg)
+                leaf = pools[key]["k"]
+                sharded = leaf.ndim == 6          # (nb, n, bps+1, ...)
+                if sharded:
+                    from repro.serving.cache_manager import shard_block_table
+                    import numpy as np
+                    n_sh, bps = leaf.shape[1], leaf.shape[2] - 1
+                    bt_np = np.asarray(block_table, np.int32)
+                    if bt_np.ndim == 1:
+                        bt_np = bt_np[None]               # (B=1, npg)
+                    bt = jnp.asarray(
+                        shard_block_table(bt_np, n_sh, bps))
+                    B_ = bt.shape[1]
+                else:
+                    bt = jnp.asarray(block_table, jnp.int32)
+                    if bt.ndim == 1:
+                        bt = bt[None]                     # (B=1, npg)
+                    B_ = bt.shape[0]
                 ln = jnp.asarray(hist_len, jnp.int32).reshape(-1)
-                ln = jnp.broadcast_to(ln, (bt.shape[0],))
+                ln = jnp.broadcast_to(ln, (B_,))
                 bt_b = jnp.broadcast_to(bt[None], (nb,) + bt.shape)
                 ln_b = jnp.broadcast_to(ln[None], (nb,) + ln.shape)
             p = pools[key]

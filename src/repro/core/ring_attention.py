@@ -32,6 +32,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.compat import shard_map
 
 NEG_INF = -1e30
 
@@ -202,7 +203,7 @@ def ring_attention(q, k, v, q_pos, kv_pos, *, mesh, sp_axis: str,
         o, _ = body(q, k, v, qp, kvp)
         return o
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, pos_spec, pos_spec),
         out_specs=q_spec, check_vma=False,
@@ -243,12 +244,7 @@ def split_kv_decode_local(q, k_loc, v_loc, lengths, *, axis_name,
     # by shifting lengths; a window that straddles shards is applied inside
     # decode_attention through (local_len - window).  For shards entirely
     # below the window, local_len-window >= s_loc masks everything.
-    n = lax.psum(1, axis_name)
-    o_all = lax.all_gather(o_i.astype(jnp.float32), axis_name)   # (n, B, H, D)
-    lse_all = lax.all_gather(lse_i, axis_name)                   # (n, B, H)
-    lse = jax.scipy.special.logsumexp(lse_all, axis=0)
-    w = jnp.exp(lse_all - lse[None])                             # (n, B, H)
-    o = jnp.sum(o_all * w[..., None], axis=0)
+    o = _lse_merge_over_axis(o_i, lse_i, axis_name)
     return o.astype(q.dtype)
 
 
@@ -270,7 +266,7 @@ def split_kv_decode(q, k_cache, v_cache, lengths, *, mesh, split_axis,
     if k_new is None:
         body = partial(split_kv_decode_local, axis_name=split_axis,
                        window=window, softmax_scale=softmax_scale, impl=impl)
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(batch_axis, None, None),
                       P(batch_axis, split_axis, None, None),
@@ -299,7 +295,7 @@ def split_kv_decode(q, k_cache, v_cache, lengths, *, mesh, split_axis,
         return o, k_loc, v_loc
 
     cache_spec = P(batch_axis, split_axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axis, None, None), cache_spec, cache_spec,
                   P(batch_axis,), P(batch_axis, None, None),
@@ -330,12 +326,270 @@ def sharded_cache_update(k_cache, v_cache, k_new, v_new, positions, *,
         return k_loc, v_loc
 
     cache_spec = P(batch_axis, split_axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(cache_spec, cache_spec, P(batch_axis, None, None),
                   P(batch_axis, None, None), P(batch_axis,)),
         out_specs=(cache_spec, cache_spec), check_vma=False,
     )(k_cache, v_cache, k_new, v_new, positions)
+
+
+# ---------------------------------------------------- sharded paged decode
+def _lse_merge_over_axis(o_i, lse_i, axis_name):
+    """All-gather per-shard (o, lse) partials over ``axis_name`` and merge
+    them by log-sum-exp — the split-KV combine shared by the dense and
+    paged decode islands.  o_i: (B, H, D); lse_i: (B, H)."""
+    o_all = lax.all_gather(o_i.astype(jnp.float32), axis_name)   # (n, B, H, D)
+    lse_all = lax.all_gather(lse_i, axis_name)                   # (n, B, H)
+    lse = jax.scipy.special.logsumexp(lse_all, axis=0)
+    w = jnp.exp(lse_all - lse[None])
+    return jnp.sum(o_all * w[..., None], axis=0)
+
+
+def _local_page_slab(k_loc, v_loc, bt_loc, lengths, n, idx):
+    """Assemble one shard's pages into a positional KV slab.
+
+    Gathers the local pages in table order and computes each slot's
+    GLOBAL token position from the stripe layout (local page j holds
+    global page ``j * n + idx``); slots at/past the valid length —
+    including scratch-padded table columns, whose computed positions are
+    always past it — are pushed to INT32_MAX, where causal position
+    masking retires them.  Returns (k_slab, v_slab, positions), each
+    (B, npg_local * page, ...)."""
+    B, npg = bt_loc.shape
+    page = k_loc.shape[1]
+    kg = k_loc[bt_loc].reshape(B, npg * page, *k_loc.shape[2:])
+    vg = v_loc[bt_loc].reshape(B, npg * page, *v_loc.shape[2:])
+    gpage = jnp.arange(npg, dtype=jnp.int32) * n + idx
+    pos = (gpage[:, None] * page
+           + jnp.arange(page, dtype=jnp.int32)[None]).reshape(-1)
+    pos = jnp.broadcast_to(pos[None], (B, npg * page))
+    pos = jnp.where(pos < lengths[:, None], pos, jnp.int32(2**31 - 1))
+    return kg, vg, pos
+
+
+def sharded_paged_decode_local(q, k_loc, v_loc, bt_loc, lengths, *,
+                               axis_name, window: Optional[int] = None,
+                               softmax_scale=None, impl: Optional[str] = None,
+                               k_new=None, v_new=None):
+    """Per-shard body of the split-KV *paged* decode (call inside
+    shard_map).
+
+    k_loc/v_loc: (blocks_per_shard + 1, page, KVH, D) — this shard's slice
+    of the striped pool (last page is scratch); bt_loc: (B, npg_local)
+    local page ids, where column j is the sequence's logical page ``j * n
+    + idx``; lengths: (B,) GLOBAL valid lengths (excluding the new token
+    when ``k_new`` is given); q replicated over the axis.
+
+    The new token's K/V is scattered INSIDE the island by whichever shard
+    owns the page that position ``lengths`` falls in (the others route the
+    write to their scratch page), then each shard runs the paged decode
+    kernel over its own pages.  Striping makes the local view contiguously
+    valid — local page j covers global tokens [(j*n+idx)*page, ...), whose
+    valid counts form a prefix — so the per-shard partial is just
+    ``ops.paged_decode_attention`` with the shard's local length, and the
+    partials merge by LSE (same combine as the dense ``split_kv_decode``).
+
+    A sliding ``window`` cannot be expressed as a local length for a
+    strided shard, so that path gathers the shard's pages into a local
+    positional view and masks by positions instead.
+    """
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    B, npg = bt_loc.shape
+    page = k_loc.shape[1]
+    scratch = k_loc.shape[0] - 1
+    if k_new is not None:
+        tgt = lengths // page                               # global page (B,)
+        own = (tgt % n) == idx
+        bidx = jnp.arange(B)
+        safe = jnp.clip(tgt // n, 0, npg - 1)
+        phys = jnp.where(own, bt_loc[bidx, safe], scratch)
+        slot = lengths % page
+        k_loc = k_loc.at[phys, slot].set(
+            jnp.where(own[:, None, None], k_new.astype(k_loc.dtype),
+                      k_loc[phys, slot]))
+        v_loc = v_loc.at[phys, slot].set(
+            jnp.where(own[:, None, None], v_new.astype(v_loc.dtype),
+                      v_loc[phys, slot]))
+        lengths = lengths + 1
+    # local contiguous validity: local page j holds global page j*n+idx
+    gpage = jnp.arange(npg, dtype=jnp.int32) * n + idx      # (npg,)
+    loc_len = jnp.sum(jnp.clip(lengths[:, None] - gpage[None] * page,
+                               0, page), axis=1)            # (B,)
+    if window is None:
+        o_i, lse_i = ops.paged_decode_attention(
+            q, k_loc, v_loc, bt_loc, loc_len,
+            softmax_scale=softmax_scale, with_lse=True, impl=impl)
+    else:
+        # strided shards break the "last `window` tokens are a suffix of
+        # the local view" assumption — mask by explicit global positions
+        kg, vg, pos_m = _local_page_slab(k_loc, v_loc, bt_loc, lengths,
+                                         n, idx)
+        o_i, lse_i = ops.attention(
+            q[:, None], kg, vg, q_pos=lengths[:, None] - 1, kv_pos=pos_m,
+            causal=True, window=window, softmax_scale=softmax_scale,
+            with_lse=True, impl=impl)
+        o_i, lse_i = o_i[:, 0], lse_i[:, :, 0]
+    o = _lse_merge_over_axis(o_i, lse_i, axis_name)
+    return o.astype(q.dtype), k_loc, v_loc
+
+
+def sharded_paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                         mesh, split_axis: str, batch_axis=None,
+                         window: Optional[int] = None, softmax_scale=None,
+                         impl: Optional[str] = None,
+                         k_new=None, v_new=None):
+    """Split-KV decode over a sequence-parallel *sharded paged* pool.
+
+    q: (B, H, D); k_pool/v_pool: (n, blocks_per_shard + 1, page, KVH, D)
+    sharded over ``split_axis`` on the leading device axis (the serving
+    engine's striped PagedKVCache layout); block_tables: (n, B, npg_local)
+    per-shard local page ids; lengths: (B,) global cache lengths EXCLUDING
+    the new token when (k_new, v_new): (B, KVH, D) are given — the append
+    happens inside the island on the owning shard, so pages never leave
+    their device.  Returns (o, k_pool, v_pool).  This is the paged twin of
+    ``split_kv_decode``: per-shard partial softmax over device-local pages
+    + LSE merge across the axis.
+    """
+    body = partial(sharded_paged_decode_local, axis_name=split_axis,
+                   window=window, softmax_scale=softmax_scale, impl=impl)
+    pool_spec = P(split_axis, None, None, None)
+    bt_spec = P(split_axis, batch_axis, None)
+    rep3 = P(batch_axis, None, None)
+
+    if k_new is None:
+        def f(q, kp, vp, bt, ln):
+            o, _, _ = body(q, kp[0], vp[0], bt[0], ln)
+            return o
+        return shard_map(
+            f, mesh=mesh,
+            in_specs=(rep3, pool_spec, pool_spec, bt_spec, P(batch_axis,)),
+            out_specs=rep3, check_vma=False,
+        )(q, k_pool, v_pool, block_tables, lengths)
+
+    def f(q, kp, vp, bt, ln, kn, vn):
+        o, k_loc, v_loc = body(q, kp[0], vp[0], bt[0], ln,
+                               k_new=kn, v_new=vn)
+        return o, k_loc[None], v_loc[None]
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(rep3, pool_spec, pool_spec, bt_spec, P(batch_axis,),
+                  rep3, rep3),
+        out_specs=(rep3, pool_spec, pool_spec), check_vma=False,
+    )(q, k_pool, v_pool, block_tables, lengths, k_new, v_new)
+
+
+# ------------------------------------------------------- ring paged prefill
+def ring_paged_prefill_local(q, k, v, q_pos, kv_pos, k_pool_loc, v_pool_loc,
+                             bt_loc, hist_len, *, axis_name: str,
+                             causal: bool = True,
+                             window: Optional[int] = None,
+                             softmax_scale=None, impl: Optional[str] = None,
+                             head_shard_axis: Optional[str] = None):
+    """Per-shard body of CDSP chunk prefill against *sharded paged*
+    history (call inside shard_map).
+
+    q/k/v: the chunk's local sequence shard (B, S_loc, ·, D); pools: this
+    shard's slice of the striped history pool; bt_loc: (B, npg_local)
+    local page ids (logical page ``j * n + idx`` at column j); hist_len:
+    (B,) global history tokens.
+
+    Each shard assembles its history pages into a positional KV slab
+    (natural-order positions fall out of the stripe layout; invalid /
+    scratch slots are pushed to INT32_MAX where the causal mask kills
+    them) and the ring then rotates BOTH the chunk's own KV shard and the
+    history slab: after n steps every query has seen every own-chunk key
+    and every history page, without any page leaving its owner.  Partials
+    merge by LSE exactly like the dense ring.
+
+    KV heads arrive replicated (the pool stores full KVH width, so the
+    chunk's own KV rides the same layout); under TP each device slices
+    out exactly the kv-head range its local q-head group reads — for
+    both the own-chunk KV and the history pool — before entering the
+    ring."""
+    if head_shard_axis is not None:
+        tp = lax.psum(1, head_shard_axis)
+        H_loc, KVH_full = q.shape[2], k.shape[2]
+        group_global = (H_loc * tp) // KVH_full
+        if tp > 1 and KVH_full > 1:
+            n_kv_loc = max(1, H_loc // group_global)
+            idx_h = lax.axis_index(head_shard_axis)
+            start = (idx_h * H_loc) // group_global
+            k = lax.dynamic_slice_in_dim(k, start, n_kv_loc, axis=2)
+            v = lax.dynamic_slice_in_dim(v, start, n_kv_loc, axis=2)
+            # pool slice: (bps + 1, page, KVH, D) — heads on axis 2
+            k_pool_loc = lax.dynamic_slice_in_dim(k_pool_loc, start,
+                                                  n_kv_loc, axis=2)
+            v_pool_loc = lax.dynamic_slice_in_dim(v_pool_loc, start,
+                                                  n_kv_loc, axis=2)
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    hk, hv, hpos = _local_page_slab(k_pool_loc, v_pool_loc, bt_loc,
+                                    hist_len, n, idx)
+
+    o = jnp.zeros(q.shape, jnp.float32)
+    lse = jnp.full((q.shape[0], q.shape[2], q.shape[1]), NEG_INF, jnp.float32)
+    k_c, v_c, kvp_c = k, v, kv_pos
+    hk_c, hv_c, hp_c = hk, hv, hpos
+    for step in range(n):
+        o_i, lse_i = ops.attention(q, k_c, v_c, q_pos, kvp_c, causal=causal,
+                                   window=window, softmax_scale=softmax_scale,
+                                   with_lse=True, impl=impl)
+        o, lse = _merge(o, lse, o_i, lse_i)
+        o_h, lse_h = ops.attention(q, hk_c, hv_c, q_pos, hp_c, causal=True,
+                                   window=window, softmax_scale=softmax_scale,
+                                   with_lse=True, impl=impl)
+        o, lse = _merge(o, lse, o_h, lse_h)
+        if step != n - 1:
+            k_c = lax.ppermute(k_c, axis_name, perm)
+            v_c = lax.ppermute(v_c, axis_name, perm)
+            kvp_c = lax.ppermute(kvp_c, axis_name, perm)
+            hk_c = lax.ppermute(hk_c, axis_name, perm)
+            hv_c = lax.ppermute(hv_c, axis_name, perm)
+            hp_c = lax.ppermute(hp_c, axis_name, perm)
+    return o.astype(q.dtype), lse
+
+
+def ring_paged_prefill(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables,
+                       hist_len, *, mesh, sp_axis: str,
+                       head_axis: Optional[str] = None,
+                       batch_axis=None, causal: bool = True,
+                       window: Optional[int] = None, softmax_scale=None,
+                       impl: Optional[str] = None):
+    """Global-view ring attention for a CDSP chunk whose cross-chunk
+    history lives in a sequence-parallel sharded page pool.
+
+    q/k/v sequence-sharded over ``sp_axis`` (the chunk itself); k_pool/
+    v_pool (n, blocks_per_shard + 1, page, KVH, D) sharded over the same
+    axis on the leading device axis; block_tables (n, B, npg_local);
+    hist_len (B,).  History pages rotate through the ring alongside the
+    chunk's own KV shards — this is what deletes the dense-history
+    fallback for distributed chunks (models/attention.py).  Returns
+    (B, S, H, D) sharded like the dense ring output."""
+    q_spec = P(batch_axis, sp_axis, head_axis, None)
+    # own-chunk KV heads stay replicated like the pool's (sliced per
+    # device inside the body when q heads are TP-sharded)
+    kv_spec = P(batch_axis, sp_axis, None, None)
+    pos_spec = P(batch_axis, sp_axis)
+    pool_spec = P(sp_axis, None, None, None, None)
+    bt_spec = P(sp_axis, None, None)
+    body = partial(ring_paged_prefill_local, axis_name=sp_axis,
+                   causal=causal, window=window, softmax_scale=softmax_scale,
+                   impl=impl, head_shard_axis=head_axis)
+
+    def f(q, k, v, qp, kvp, kp, vp, bt, ln):
+        o, _ = body(q, k, v, qp, kvp, kp[0], vp[0], bt[0], ln)
+        return o
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, pos_spec, pos_spec,
+                  pool_spec, pool_spec, bt_spec, P(batch_axis,)),
+        out_specs=q_spec, check_vma=False,
+    )(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables, hist_len)
 
 
 # ------------------------------------------------------ sequence-parallel SSD
@@ -418,7 +672,7 @@ def sp_ssd(x, dt, A, Bm, Cm, *, mesh, sp_axis: str, chunk: int = 128,
     if h0 is not None:
         in_specs.append(h_spec)
         args.append(h0)
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=(x_spec, h_spec), check_vma=False,
     )(*args)

@@ -282,6 +282,136 @@ def copy_kv_block_within(pool: jax.Array, src_block: jax.Array,
     return pool.at[:, dst_block].set(pool[:, src_block])
 
 
+# ----------------------------------------------- sharded (split-KV) layout
+#
+# Sequence-parallel sharded pools (serving/cache_manager.PagedKVCache with
+# kv_shards > 1): per layer the pool is (nb, n_shards, blocks_per_shard + 1,
+# page, KVH, D), placed over a mesh axis, with a request's logical page i
+# striped onto shard i % n_shards.  The helpers below are shard_map bodies
+# over that axis: every page write/copy/gather happens on the device that
+# owns the page — tokens and staged pages move, pages never do.  Local page
+# id ``blocks_per_shard`` is the shard's scratch page; routing a payload at
+# scratch is the uniform-SPMD way to say "not mine".
+#
+# The per-(mesh, axis) jitted wrappers are cached: the engine calls these
+# every chunk/tick with the same mesh, so the shard_map closure and its
+# donation setup are built once.
+
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_page_ops(mesh, axis: str):
+    """Build the jitted shard_map page helpers for one (mesh, axis)."""
+    pool_spec = P(None, axis)                 # (nb, n, bps+1, page, KVH, D)
+    ids_spec = P(axis,)                       # leading shard axis
+
+    def _scatter_chunk(pool, local_pages, seq_kv, positions):
+        # pool: (nb, 1, bps+1, page, KVH, D); local_pages: (1, npg_loc);
+        # seq_kv: (nb, L, KVH, D) replicated; positions: (L,) replicated
+        pl_, lp = pool[:, 0], local_pages[0]
+        n = lax.psum(1, axis)
+        idx = lax.axis_index(axis)
+        page = pl_.shape[2]
+        scratch = pl_.shape[1] - 1
+        pos = positions.astype(jnp.int32)
+        pg = pos // page
+        own = (pg % n) == idx
+        phys = jnp.where(own, lp[pg // n], scratch)
+        # non-owned tokens land on the scratch page (garbage, never read)
+        return pl_.at[:, phys, pos % page].set(
+            seq_kv.astype(pl_.dtype))[:, None]
+
+    def _copy_blocks(dst, src, src_local, dst_local):
+        d, s = dst[:, 0], src[:, 0]
+        return d.at[:, dst_local[0]].set(
+            s[:, src_local[0]].astype(d.dtype))[:, None]
+
+    def _scatter_blocks(pool, dst_local, pages):
+        # pages: (nb, 1, m, page, KVH, D) — this shard's payload
+        pl_ = pool[:, 0]
+        return pl_.at[:, dst_local[0]].set(
+            pages[:, 0].astype(pl_.dtype))[:, None]
+
+    def _gather_blocks(pool, local):
+        return pool[:, 0][:, local[0]][:, None]
+
+    def _copy_within(pool, src_local, dst_local):
+        pl_ = pool[:, 0]
+        return pl_.at[:, dst_local[0]].set(pl_[:, src_local[0]])[:, None]
+
+    def sm(f, in_specs, out_specs, donate=None):
+        g = shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+        return (jax.jit(g) if donate is None
+                else jax.jit(g, donate_argnums=donate))
+
+    rep = P()
+    return {
+        "scatter_chunk": sm(
+            _scatter_chunk, (pool_spec, ids_spec, rep, rep), pool_spec,
+            donate=(0,)),
+        "copy_blocks": sm(
+            _copy_blocks, (pool_spec, pool_spec, ids_spec, ids_spec),
+            pool_spec, donate=(0,)),
+        "scatter_blocks": sm(
+            _scatter_blocks, (pool_spec, ids_spec, P(None, axis)),
+            pool_spec, donate=(0,)),
+        "gather_blocks": sm(
+            _gather_blocks, (pool_spec, ids_spec), P(None, axis)),
+        "copy_within": sm(
+            _copy_within, (pool_spec, ids_spec, ids_spec), pool_spec,
+            donate=(0,)),
+    }
+
+
+def shard_scatter_kv_chunk(pool, local_pages, seq_kv, positions, *,
+                           mesh, axis: str):
+    """Sharded ``scatter_kv_chunk``: the chunk's tokens are visible on
+    every shard (replicated in-spec); each shard writes only the tokens
+    whose logical page it owns (page ``p`` belongs to shard ``p % n``),
+    routing the rest to its scratch page.  The pool argument is donated."""
+    return _sharded_page_ops(mesh, axis)["scatter_chunk"](
+        pool, local_pages, seq_kv, positions)
+
+
+def shard_copy_kv_blocks(dst_pool, src_pool, src_local, dst_local, *,
+                         mesh, axis: str):
+    """Sharded ``copy_kv_blocks``: per-shard (m,) local id lists, aligned
+    pairs guaranteed same-shard by stripe alignment — a purely
+    device-local page copy (admission handoff between sharded pools).
+    The destination pool is donated."""
+    return _sharded_page_ops(mesh, axis)["copy_blocks"](
+        dst_pool, src_pool, src_local, dst_local)
+
+
+def shard_scatter_kv_blocks(pool, dst_local, pages, *, mesh, axis: str):
+    """Sharded ``scatter_kv_blocks``: ``pages`` is (nb, n_shards, m, page,
+    KVH, D) grouped per destination shard (host swap-in / promotion
+    payloads, or re-grouped pages from an unsharded pool).  The pool
+    argument is donated."""
+    return _sharded_page_ops(mesh, axis)["scatter_blocks"](
+        pool, dst_local, pages)
+
+
+def shard_gather_kv_blocks(pool, local, *, mesh, axis: str):
+    """Sharded ``gather_kv_blocks``: each shard reads its own pages;
+    result is (nb, n_shards, m, page, KVH, D) in per-shard grouping order
+    (the caller reassembles logical order host-side)."""
+    return _sharded_page_ops(mesh, axis)["gather_blocks"](pool, local)
+
+
+def shard_copy_kv_block_within(pool, src_local, dst_local, *, mesh,
+                               axis: str):
+    """Sharded ``copy_kv_block_within``: per-shard (scalar) local ids —
+    the owning shard copies the CoW page, every other shard copies scratch
+    onto scratch.  The pool argument is donated."""
+    return _sharded_page_ops(mesh, axis)["copy_within"](
+        pool, src_local, dst_local)
+
+
 def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                          lse_ref, acc_scr, m_scr, l_scr,
                          *, scale: float, nk: int, bk: int, group: int,

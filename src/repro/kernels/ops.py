@@ -80,8 +80,19 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     into a per-step dense view sized to the table width and reuses the
     decode oracle; ``impl="interpret"`` runs the Pallas kernel body through
     the interpreter for validation.
+
+    A *sequence-parallel sharded* pool (3-dim block_tables (n_shards, B,
+    npg_local), 5-dim pools — serving/cache_manager with kv_shards > 1)
+    is served by the logical-order gather oracle regardless of ``impl``:
+    the distributed execution path for that layout is the shard_map
+    split-KV island (core/ring_attention.sharded_paged_decode), whose
+    per-shard partials dispatch back here with the unsharded layout.
     """
     impl = impl or default_impl()
+    if block_tables.ndim == 3:
+        return _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, block_tables, lengths, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse)
     if impl in ("ref", "ref_blocked"):
         return _ref.paged_decode_attention_ref(
             q, k_pool, v_pool, block_tables, lengths, window=window,
@@ -112,8 +123,19 @@ def paged_prefill_attention(q, k_new, v_new, q_pos, kv_pos_new,
     gather fallback ``ref.paged_prefill_attention_ref`` runs instead;
     ``impl="interpret"`` pushes both Pallas kernel bodies through the
     interpreter for validation.
+
+    The sequence-parallel sharded pool layout (3-dim block_tables, 5-dim
+    pools) always takes the gather oracle: distributed execution of that
+    layout is ``core/ring_attention.ring_paged_prefill`` (history pages
+    rotate through the ring), and this fallback only serves chunks whose
+    length does not divide over the ring axis.
     """
     impl = impl or default_impl()
+    if block_tables.ndim == 3:
+        return _ref.paged_prefill_attention_ref(
+            q, k_new, v_new, q_pos, kv_pos_new, k_pool, v_pool,
+            block_tables, hist_len, causal=causal, window=window,
+            softmax_scale=softmax_scale)
     if impl in ("ref", "ref_blocked"):
         return _ref.paged_prefill_attention_ref(
             q, k_new, v_new, q_pos, kv_pos_new, k_pool, v_pool,

@@ -166,6 +166,24 @@ def decode_attention_ref(
     return res[:, 0]
 
 
+def sharded_pool_view(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Dense logical-order view of a *sequence-parallel sharded* paged
+    pool (serving/cache_manager.PagedKVCache with ``kv_shards > 1``).
+
+    pool: (n_shards, blocks_per_shard + 1, page, KVH, D); tables:
+    (n_shards, B, npg_local) local page ids, where row s column j holds
+    the sequence's logical page ``j * n_shards + s`` (striped layout).
+    Returns (B, npg_local * n_shards * page, KVH, D) with tokens at their
+    logical flat positions — scratch-padded table entries land at
+    positions at/past the valid length, so the usual ``idx < length``
+    masking covers them."""
+    n, B, npg = tables.shape
+    page = pool.shape[2]
+    g = pool[jnp.arange(n)[:, None, None], tables]  # (n, B, npg, page, ...)
+    g = jnp.moveaxis(g, 0, 2)                       # (B, npg, n, page, ...)
+    return g.reshape(B, npg * n * page, *pool.shape[3:])
+
+
 def paged_decode_attention_ref(
     q: jax.Array,                      # (B, H, D)
     k_pool: jax.Array,                 # (n_pages, page, KVH, D)
@@ -186,11 +204,21 @@ def paged_decode_attention_ref(
     the CPU/non-Pallas execution path behind
     ``ops.paged_decode_attention``; on TPU the scalar-prefetch kernel
     ``flash_decode.paged_flash_decode`` skips the materialisation entirely.
+
+    Also accepts the sequence-parallel sharded layout (3-dim
+    ``block_tables`` (n_shards, B, npg_local) + 5-dim pools): the striped
+    pages are gathered back into logical order first — the single-process
+    oracle the shard_map split-KV path
+    (core/ring_attention.sharded_paged_decode) is validated against.
     """
-    B, npg = block_tables.shape
-    page = k_pool.shape[1]
-    k = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
-    v = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
+    if block_tables.ndim == 3:
+        k = sharded_pool_view(k_pool, block_tables)
+        v = sharded_pool_view(v_pool, block_tables)
+    else:
+        B, npg = block_tables.shape
+        page = k_pool.shape[1]
+        k = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
+        v = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
     return decode_attention_ref(q, k, v, lengths, window=window,
                                 softmax_scale=softmax_scale,
                                 with_lse=with_lse)
@@ -221,17 +249,28 @@ def paged_prefill_attention_ref(
     execution path behind ``ops.paged_prefill_attention``; on TPU the
     scalar-prefetch kernel ``flash_attention.paged_flash_prefill`` +
     ``merge_partials`` skips the dense materialisation.
+
+    Accepts the sequence-parallel sharded pool layout too (3-dim
+    ``block_tables`` + 5-dim pools, see ``sharded_pool_view``) — the
+    single-process oracle for ``core/ring_attention.ring_paged_prefill``
+    and the fallback when a chunk's length does not divide over the ring.
     """
     B, Sq = q.shape[:2]
-    npg = block_tables.shape[1]
-    page = k_pool.shape[1]
-    hk = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
-    hv = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
-    hist_pos = jnp.arange(npg * page, dtype=jnp.int32)
+    if block_tables.ndim == 3:
+        hk = sharded_pool_view(k_pool, block_tables)
+        hv = sharded_pool_view(v_pool, block_tables)
+        S_h = hk.shape[1]
+    else:
+        npg = block_tables.shape[1]
+        page = k_pool.shape[1]
+        S_h = npg * page
+        hk = k_pool[block_tables].reshape(B, S_h, *k_pool.shape[2:])
+        hv = v_pool[block_tables].reshape(B, S_h, *v_pool.shape[2:])
+    hist_pos = jnp.arange(S_h, dtype=jnp.int32)
     k = jnp.concatenate([hk.astype(k_new.dtype), k_new], axis=1)
     v = jnp.concatenate([hv.astype(v_new.dtype), v_new], axis=1)
     kv_pos = jnp.concatenate(
-        [jnp.broadcast_to(hist_pos[None], (B, npg * page)),
+        [jnp.broadcast_to(hist_pos[None], (B, S_h)),
          _broadcast_pos(kv_pos_new, B)], axis=1)
     kv_valid = jnp.concatenate(
         [hist_pos[None, :] < hist_len[:, None],

@@ -25,6 +25,7 @@ import jax
 from repro.configs.registry import (ASSIGNED, get_config, input_specs,
                                     supports_shape)
 from repro.models.config import INPUT_SHAPES
+from repro.compat import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyse, collective_bytes
 from repro.launch.steps import build_step, scanned_param_bytes_per_dev
@@ -57,7 +58,7 @@ def _cost_terms(cfg, shape, mesh, n_blocks: int,
         n_encoder_layers=(n_blocks if cfg.encoder_decoder else 0))
     fn, in_sh, args = build_step(small, shape, mesh, unroll_scan=True,
                                  ctx_overrides=ctx_overrides)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
         cost = compiled.cost_analysis()
         coll = collective_bytes(compiled.as_text())
@@ -105,7 +106,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     #    bounds attention temp memory the way the TPU flash kernel does.
     fn, in_sh, args = build_step(cfg, shape, mesh, impl="ref_blocked",
                                  ctx_overrides=overrides)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

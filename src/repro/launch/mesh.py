@@ -17,16 +17,24 @@ from repro.models.sharding import ExecContext
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.compat import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_context(mesh, mode: str, *, impl: Optional[str] = None,
                  window: Optional[int] = None) -> ExecContext:
-    """Mesh-axis roles per execution mode (DESIGN.md §4)."""
+    """Mesh-axis roles per execution mode (DESIGN.md §4).
+
+    ``serve_paged`` is the paged serving engine's context: one context
+    drives both chunk prefill (ring attention over ``sp_axis``) and paged
+    decode (split-KV island over ``kv_split_axis``), and the engine's
+    paged pools stripe over those axes (ExecContext.pool_axis).  Both
+    roles ride the "data" axis so prefill-pool pages hand off to decode
+    pools device-locally — stripe position i lives on the same device in
+    both pools (serving/cache_manager).
+    """
     pod = "pod" if "pod" in mesh.axis_names else None
     common = dict(mesh=mesh, tp_axis="model", pod_axis=pod, impl=impl,
                   window=window)
@@ -36,4 +44,6 @@ def make_context(mesh, mode: str, *, impl: Optional[str] = None,
         return ExecContext(sp_axis="data", **common)
     if mode == "decode":
         return ExecContext(dp_axis="data", kv_split_axis="model", **common)
+    if mode == "serve_paged":
+        return ExecContext(sp_axis="data", kv_split_axis="data", **common)
     raise ValueError(mode)

@@ -16,8 +16,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ring_attention import (ring_attention, sharded_cache_update,
-                                       split_kv_decode)
+from repro.core.ring_attention import (ring_attention, ring_paged_prefill,
+                                       sharded_cache_update,
+                                       sharded_paged_decode, split_kv_decode)
 from repro.kernels import ops
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, rms_norm
@@ -72,6 +73,11 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         new token's K/V is scattered into its page and attention runs
         straight off the pool (Pallas scalar-prefetch kernel on TPU,
         gather fallback elsewhere) — no dense (B, max_seq) view exists.
+        A *sharded* paged cache — pools (n_shards, blocks_per_shard + 1,
+        page, KVH, D) split over ctx.kv_split_axis, block_table
+        (n_shards, B, npg_local) per-shard local ids — runs as a split-KV
+        shard_map island (per-shard partial softmax over device-local
+        pages + LSE merge; core/ring_attention.sharded_paged_decode).
     history (CDSP chunked prefill), two layouts:
       * dense — {"k","v","pos"}: previous chunks' KV, already re-balanced
         (evenly re-sharded) over the current chunk's group; position-array
@@ -80,6 +86,9 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         KV in physical pages in natural token order (the serving engine's
         prefill-direct-to-pages path, core/cdsp.pages_history_view); the
         chunk attends through the table via ops.paged_prefill_attention.
+        Under ctx.sp_axis with the sharded pool layout, history pages
+        rotate through the ring alongside the chunk's own KV shards
+        (core/ring_attention.ring_paged_prefill).
     """
     B, S, _ = x.shape
     q, k, v = qkv_proj(x, p, cfg, prefix)
@@ -95,21 +104,37 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         # whose table points at the scratch page (inactive batch slots)
         # write and read garbage that no caller consumes.
         assert cache_len is not None
-        if ctx.kv_split_axis is not None and ctx.mesh is not None:
-            # a shard_map island that splits the paged pool over
-            # kv_split_axis does not exist yet (ROADMAP); fail loudly
-            # rather than silently replicating the whole pool per device
-            raise NotImplementedError(
-                "paged block-table decode cannot be combined with split-KV "
-                f"decode (ExecContext.kv_split_axis={ctx.kv_split_axis!r} "
-                f"on mesh axes {tuple(ctx.mesh.axis_names)}): the paged "
-                "pool is per decode instance and a shard_map island that "
-                "splits it over the KV axis does not exist yet (ROADMAP). "
-                "Either run the paged engine with "
-                "ctx.with_(kv_split_axis=None) — tensor/data parallelism "
-                "still apply — or pass dense {'k','v'} decode caches "
-                "(no 'block_table' entry) to keep split-KV decode.")
         qd = q[:, 0]                                         # (B, H, D)
+        if cache["block_table"].ndim == 3:
+            # sharded pool layout: split-KV paged decode island — the
+            # append lands on the shard owning the target page, each shard
+            # attends its own pages, partials merge by LSE
+            assert ctx.kv_split_axis is not None and ctx.mesh is not None, \
+                "a sharded paged cache needs ctx.kv_split_axis and a mesh"
+            o, k_pool, v_pool = sharded_paged_decode(
+                qd, cache["k"], cache["v"], cache["block_table"], cache_len,
+                mesh=ctx.mesh, split_axis=ctx.kv_split_axis,
+                batch_axis=ctx.batch_axes, window=window,
+                impl=ctx.impl, k_new=k[:, 0], v_new=v[:, 0])
+            out = out_proj(o[:, None], p, prefix)
+            return out, {"k": k_pool, "v": v_pool,
+                         "block_table": cache["block_table"]}
+        if (ctx.kv_split_axis is not None and ctx.mesh is not None
+                and ctx.axis_size(ctx.kv_split_axis) > 1):
+            # an UNSHARDED pool under split-KV decode would make GSPMD
+            # silently replicate the whole pool per device — demand the
+            # sharded layout instead (it exists now: PagedKVCache with
+            # kv_shards > 1 produces the 3-dim local tables)
+            raise ValueError(
+                "paged decode with ExecContext.kv_split_axis="
+                f"{ctx.kv_split_axis!r} needs the SHARDED pool layout "
+                "(pools (n_shards, blocks_per_shard + 1, page, KVH, D), "
+                "block_table (n_shards, B, npg_local) — build the "
+                "PagedKVCache with kv_shards > 1), got an unsharded "
+                "2-dim block table; running it would silently replicate "
+                "the whole pool on every device.  Either hand over the "
+                "sharded layout or run with ctx.with_(kv_split_axis"
+                "=None).")
         bt = cache["block_table"]                            # (B, npg) int32
         k_pool, v_pool = cache["k"], cache["v"]
         page = k_pool.shape[1]
@@ -218,17 +243,39 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         # order; attend over [pages ++ own chunk] through the block table
         # without ever gathering a dense history view (Pallas
         # paged_flash_prefill + merge on TPU, gather fallback elsewhere).
-        if ctx.sp_axis is not None and ctx.mesh is not None:
-            raise NotImplementedError(
-                "paged cross-chunk prefill history does not compose with "
-                f"ring attention (ExecContext.sp_axis={ctx.sp_axis!r}): "
-                "the page pool is engine-local.  Run prefill chunks with "
-                "ctx.with_(sp_axis=None) or hand the history over as the "
-                "dense {'k','v','pos'} tree (core/cdsp._append_history).")
-        o = ops.paged_prefill_attention(
-            q, k, v, pos2d, pos2d, history["k_pool"], history["v_pool"],
-            history["block_table"], history["len"], causal=causal,
-            window=window, impl=ctx.impl)
+        sp_n = (ctx.axis_size(ctx.sp_axis)
+                if ctx.sp_axis is not None and ctx.mesh is not None else 1)
+        if history["block_table"].ndim == 2 and sp_n > 1:
+            # mirror of the decode-side guard: an UNSHARDED history pool
+            # under ring attention would be all-gathered onto every
+            # device each chunk — demand the sharded layout
+            raise ValueError(
+                "paged cross-chunk history under ring attention "
+                f"(ExecContext.sp_axis={ctx.sp_axis!r}) needs the "
+                "SHARDED pool layout (PagedKVCache with kv_shards > 1; "
+                "block_table (n_shards, B, npg_local)), got an unsharded "
+                "2-dim block table; running it would replicate the whole "
+                "history pool on every device.  Either hand over the "
+                "sharded layout or run with ctx.with_(sp_axis=None).")
+        if (history["block_table"].ndim == 3 and sp_n > 1
+                and S % sp_n == 0):
+            # sharded pool + ring attention: the chunk's queries/KV ride
+            # the ring as usual and each shard's history pages rotate
+            # along with them — no dense history view, no page migration
+            o = ring_paged_prefill(
+                q, k, v, pos2d, pos2d, history["k_pool"],
+                history["v_pool"], history["block_table"], history["len"],
+                mesh=ctx.mesh, sp_axis=ctx.sp_axis, head_axis=h_ax,
+                batch_axis=ctx.pod_axis, causal=causal,
+                window=window, impl=ctx.impl)
+        else:
+            # single-group chunk, or a chunk length that does not divide
+            # over the ring: the gather fallback handles both pool
+            # layouts (sharded reads go through the logical-order view)
+            o = ops.paged_prefill_attention(
+                q, k, v, pos2d, pos2d, history["k_pool"], history["v_pool"],
+                history["block_table"], history["len"], causal=causal,
+                window=window, impl=ctx.impl)
         out = out_proj(o, p, prefix)
         return out, ({"k": k_self, "v": v_self} if mode == "prefill"
                      else None)

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models.config import ModelConfig
 from repro.models.layers import mlp
 from repro.models.sharding import ExecContext
+from repro.compat import shard_map
 
 GROUP_SIZE = 512
 
@@ -246,7 +247,7 @@ def _moe_ep(xt, p, cfg: ModelConfig, ctx: ExecContext, ep_ax: str,
     exp_specs = jax.tree.map(
         lambda s: P(*s[1:]), exp_specs, is_leaf=lambda s: isinstance(s, P))
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(token_axes, None, None), P(), exp_specs),
         out_specs=(P(token_axes, None, None), P()),

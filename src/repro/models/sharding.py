@@ -81,6 +81,27 @@ class ExecContext:
         axes = tuple(a for a in (self.pod_axis, self.dp_axis) if a is not None)
         return axes if axes else None
 
+    # ------------------------------------------------- paged pool sharding
+    def pool_axis(self, role: str) -> Optional[str]:
+        """Mesh axis a paged KV pool of the given role stripes over, or
+        None for an unsharded (single-device / replicated) pool.
+
+        ``role="decode"`` pools split over ``kv_split_axis`` (split-KV
+        paged decode island); ``role="prefill"`` pools split over
+        ``sp_axis`` (ring-paged prefill rotates each shard's history
+        pages).  The serving engine requires the two shard counts to
+        match when both are active, so admission page copies stay
+        stripe-aligned (serving/engine.py)."""
+        ax = {"decode": self.kv_split_axis,
+              "prefill": self.sp_axis}[role]
+        if ax is None or self.mesh is None or self.axis_size(ax) <= 1:
+            return None
+        return ax
+
+    def pool_shards(self, role: str) -> int:
+        """Shard count for a paged pool of the given role (1 = unsharded)."""
+        return self.axis_size(self.pool_axis(role))
+
     def with_(self, **kw) -> "ExecContext":
         return replace(self, **kw)
 

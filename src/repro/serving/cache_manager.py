@@ -44,6 +44,23 @@ paged layout, one pool per instance).  Block id ``total_blocks`` is a
 scratch page: padded batch rows write there so inactive rows can never
 corrupt live pages.  All pool writes go through donated jitted helpers
 (kernels/flash_decode.py) so XLA updates pool buffers in place.
+
+**Sequence-parallel sharded pools** (``kv_shards > 1``): the pool grows a
+leading device axis — per layer ``(n_blocks, kv_shards, blocks_per_shard
++ 1, block_size, KVH, D)``, placed over a mesh axis — and the
+BlockManager mirrors it with per-shard free lists.  Allocation is
+*striped*: a request's i-th logical page always lives on shard
+``i % kv_shards`` (its global block id satisfies ``shard_of(b) == i %
+kv_shards``), so split-KV decode attends each shard's page subset with a
+contiguously-valid local view and merges partial softmaxes by LSE
+(core/ring_attention.sharded_paged_decode), and ring-attention prefill
+rotates each shard's history pages around the ring
+(core/ring_attention.ring_paged_prefill).  Pages never migrate between
+shards: chunk scatters, admission copies, CoW splits and host staging all
+run as shard_map bodies that keep every page device-local
+(kernels/flash_decode.py sharded helpers).  Each shard carries its own
+scratch page (local id ``blocks_per_shard``); the global scratch id stays
+``total_blocks``.
 """
 
 from __future__ import annotations
@@ -53,6 +70,30 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple)
 
 import numpy as np
+
+
+def shard_block_table(table: np.ndarray, kv_shards: int,
+                      blocks_per_shard: int) -> np.ndarray:
+    """Global block table -> per-shard local tables for the sharded pool.
+
+    ``table`` is (B, npg) int32 *global* block ids (striped: position j is
+    on shard ``j % kv_shards``; the global scratch ``kv_shards *
+    blocks_per_shard`` may appear anywhere as padding).  Returns
+    (kv_shards, B, ceil(npg / kv_shards)) int32 *local* page ids, where
+    row ``s`` column ``j`` holds the request's logical page ``j *
+    kv_shards + s`` (or the shard's local scratch ``blocks_per_shard``
+    when padded / past the allocation)."""
+    table = np.asarray(table, np.int32)
+    B, npg = table.shape
+    npg_loc = -(-max(npg, 1) // kv_shards)
+    scratch = kv_shards * blocks_per_shard
+    out = np.full((kv_shards, B, npg_loc), blocks_per_shard, np.int32)
+    for s in range(kv_shards):
+        cols = np.arange(s, npg, kv_shards)
+        g = table[:, cols]
+        out[s, :, :len(cols)] = np.where(g == scratch, blocks_per_shard,
+                                         g % blocks_per_shard)
+    return out
 
 
 def block_hashes(tokens: np.ndarray, block_size: int) -> List[int]:
@@ -84,29 +125,68 @@ class BlockManager:
     (counted against admission via ``can_fit``/``freeness`` but not yet
     backed by physical blocks); under prefix sharing the engine reserves
     only the tokens that need *fresh* blocks.
+
+    With ``kv_shards > 1`` the pool mirrors a sequence-parallel sharded
+    ``PagedKVCache``: one free list per shard, and allocation is striped —
+    the block at position i of any allocation comes from shard ``i %
+    kv_shards`` (device-major ids: ``shard_of(b) = b // blocks_per_shard``).
+    Capacity checks (``can_fit``/``extend``) are per-shard exact, and a
+    virtual reservation carries the stripe ``offset`` it will be committed
+    at (the number of shared blocks preceding the fresh take) so the
+    per-shard promise matches the eventual ``_take``.
     """
 
     total_blocks: int
     block_size: int = 256
-    free_blocks: Optional[List[int]] = None
+    kv_shards: int = 1
     allocs: Dict[int, List[int]] = field(default_factory=dict)
     virtual_tokens: Dict[int, int] = field(default_factory=dict)
+    virtual_offset: Dict[int, int] = field(default_factory=dict)
     ref: Dict[int, int] = field(default_factory=dict)        # block -> holders
     hash_of: Dict[int, int] = field(default_factory=dict)    # block -> hash
     by_hash: Dict[int, int] = field(default_factory=dict)    # hash -> block
     tokens_of: Dict[int, tuple] = field(default_factory=dict)  # blk -> tokens
-    # host-offload hook: called as demote_cb(block, hash, tokens) when a
-    # hash-published block's last reference dies, BEFORE the block returns
-    # to the free list — the engine copies the page to the host tier so
-    # the prefix stays matchable after eviction (serving/kv_offload.py)
-    demote_cb: Optional[Callable[[int, int, tuple], None]] = None
+    # host-offload hook: called ONCE per release as demote_cb(dying) with
+    # dying = [(block, hash, tokens), ...] for every hash-published block
+    # whose last reference died, BEFORE any of them returns to the free
+    # list — the engine copies all their pages to the host tier in one
+    # batched device->host gather (serving/kv_offload.py)
+    demote_cb: Optional[Callable[[List[Tuple[int, int, tuple]]], None]] = None
     peak_in_use: int = 0
     stats: Dict[str, int] = field(default_factory=lambda: {
         "fresh": 0, "shared": 0, "cow": 0})
 
     def __post_init__(self):
-        if self.free_blocks is None:
-            self.free_blocks = list(range(self.total_blocks))
+        assert self.total_blocks % self.kv_shards == 0, \
+            (self.total_blocks, self.kv_shards)
+        self.blocks_per_shard = self.total_blocks // self.kv_shards
+        self.shard_free: List[List[int]] = [
+            list(range(s * self.blocks_per_shard,
+                       (s + 1) * self.blocks_per_shard))
+            for s in range(self.kv_shards)]
+
+    @property
+    def free_blocks(self) -> List[int]:
+        """Flat view of the per-shard free lists (read-only snapshot)."""
+        return [b for fl in self.shard_free for b in fl]
+
+    def shard_of(self, block: int) -> int:
+        return block // self.blocks_per_shard
+
+    def _stripe_need(self, n_blocks: int, offset: int) -> List[int]:
+        """Blocks landing on each shard when taking ``n_blocks`` at stripe
+        positions ``offset .. offset + n_blocks - 1``."""
+        base, rem = divmod(n_blocks, self.kv_shards)
+        return [base + (1 if (s - offset) % self.kv_shards < rem else 0)
+                for s in range(self.kv_shards)]
+
+    def _virtual_by_shard(self) -> List[int]:
+        out = [0] * self.kv_shards
+        for rid, t in self.virtual_tokens.items():
+            need = self._stripe_need(self.blocks_for(t),
+                                     self.virtual_offset.get(rid, 0))
+            out = [a + b for a, b in zip(out, need)]
+        return out
 
     # ------------------------------------------------------------- queries
     def blocks_for(self, n_tokens: int) -> int:
@@ -115,8 +195,8 @@ class BlockManager:
 
     @property
     def n_free(self) -> int:
-        """Physical blocks currently on the free list."""
-        return len(self.free_blocks)
+        """Physical blocks currently on the free list(s)."""
+        return sum(len(fl) for fl in self.shard_free)
 
     @property
     def virtual_blocks(self) -> int:
@@ -127,21 +207,44 @@ class BlockManager:
         """Llumnix freeness rate: effective free blocks per batch slot."""
         return (self.n_free - self.virtual_blocks) / (batch_size + 1.0)
 
-    def can_fit(self, n_tokens: int) -> bool:
-        """True if ``n_tokens`` fit after honouring virtual reservations."""
-        return self.blocks_for(n_tokens) <= self.n_free - self.virtual_blocks
+    def can_fit(self, n_tokens: int, offset: int = 0) -> bool:
+        """True if ``n_tokens`` worth of fresh blocks, taken at stripe
+        position ``offset``, fit on every shard after honouring virtual
+        reservations (per-shard exact — a striped pool can exhaust one
+        shard while others still have room)."""
+        need = self._stripe_need(self.blocks_for(n_tokens), offset)
+        virt = self._virtual_by_shard()
+        return all(need[s] <= len(self.shard_free[s]) - virt[s]
+                   for s in range(self.kv_shards))
+
+    def can_extend(self, rid: int, n_tokens: int) -> bool:
+        """True if ``extend(rid, n_tokens)`` would succeed right now."""
+        need = self.blocks_for(n_tokens) - len(self.allocs[rid])
+        return need <= 0 or self.can_fit(need * self.block_size,
+                                         offset=len(self.allocs[rid]))
+
+    def can_take_at(self, stripe: int) -> bool:
+        """True if one fresh block is available on the shard that stripe
+        position ``stripe`` maps to (the copy-on-write fit check)."""
+        s = stripe % self.kv_shards
+        return len(self.shard_free[s]) - self._virtual_by_shard()[s] >= 1
 
     def grow_blocks_needed(self, rid: int, n_tokens: int) -> int:
         """Extra blocks ``rid`` needs to cover ``n_tokens`` (0 if covered)."""
         return max(0, self.blocks_for(n_tokens) - len(self.allocs[rid]))
 
     # ----------------------------------------------------------- lifecycle
-    def _take(self, n: int) -> List[int]:
-        """Pop ``n`` fresh blocks off the free list (refcount 1 each)."""
-        assert n <= self.n_free, "accounting violated"
-        blocks = [self.free_blocks.pop() for _ in range(n)]
-        for b in blocks:
+    def _take(self, n: int, offset: int = 0) -> List[int]:
+        """Pop ``n`` fresh blocks (refcount 1 each), striped from stripe
+        position ``offset`` on: block i comes from shard (offset + i) %
+        kv_shards, preserving the position->shard invariant."""
+        blocks = []
+        for i in range(n):
+            fl = self.shard_free[(offset + i) % self.kv_shards]
+            assert fl, "accounting violated"
+            b = fl.pop()
             self.ref[b] = 1
+            blocks.append(b)
         self.stats["fresh"] += n
         self.peak_in_use = max(self.peak_in_use,
                                self.total_blocks - self.n_free)
@@ -152,15 +255,21 @@ class BlockManager:
         via ``extend``; no virtual reservation involved)."""
         self.allocs.setdefault(rid, [])
 
-    def reserve_virtual(self, rid: int, n_tokens: int) -> bool:
+    def reserve_virtual(self, rid: int, n_tokens: int,
+                        offset: int = 0) -> bool:
         """Reserve capacity for an in-flight transfer; False if it cannot
         fit (the caller retries later).  A failed reserve leaves no entry
         behind.  The engine reserves only the tokens whose KV actually
         needs fresh blocks: the prefilled length minus any prefix-shared
-        blocks (grow-on-demand covers the output side)."""
-        if not self.can_fit(n_tokens):
+        blocks (grow-on-demand covers the output side).  ``offset`` is the
+        stripe position the fresh take will start at — the number of
+        shared blocks preceding it at commit time (it may shrink between
+        reserve and commit, e.g. swap-in re-sharing: a take over a subset
+        of the reserved stripe positions is always covered)."""
+        if not self.can_fit(n_tokens, offset=offset):
             return False
         self.virtual_tokens[rid] = n_tokens
+        self.virtual_offset[rid] = offset
         return True
 
     def commit(self, rid: int, shared: Sequence[int] = ()) -> List[int]:
@@ -169,14 +278,17 @@ class BlockManager:
         ``shared`` is a prefix of already-resident blocks discovered by
         ``match_prefix``/the engine's token compare: they are referenced
         (refcount + 1), not copied, and the fresh remainder — sized by the
-        reservation — is popped off the free list.  The engine calls
-        reserve_virtual and commit within one event, so decode-side
-        ``extend`` can never race a pending reservation."""
+        reservation, striped from position ``len(shared)`` — is popped off
+        the free lists.  The engine calls reserve_virtual and commit
+        within one event, so decode-side ``extend`` can never race a
+        pending reservation."""
         n = self.virtual_tokens.pop(rid)
+        self.virtual_offset.pop(rid, None)
         for b in shared:
             self.ref[b] += 1
         self.stats["shared"] += len(shared)
-        blocks = list(shared) + self._take(self.blocks_for(n))
+        blocks = list(shared) + self._take(self.blocks_for(n),
+                                           offset=len(shared))
         self.allocs[rid] = blocks
         return blocks
 
@@ -185,15 +297,17 @@ class BlockManager:
         crossing a page boundary, or the prefill pool absorbing the next
         chunk).  Mutates the allocation list in place — holders of the
         list (the engine's per-request metadata) observe the growth.
-        False if the pool is exhausted; the engine then preempts."""
+        False if the pool (any target shard) is exhausted; the engine then
+        preempts."""
         need = self.blocks_for(n_tokens) - len(self.allocs[rid])
         if need <= 0:
             return True
-        if need > self.n_free - self.virtual_blocks:
+        if not self.can_fit(need * self.block_size,
+                            offset=len(self.allocs[rid])):
             # growth must not consume blocks promised to a pending
             # reservation (an in-flight swap-in holds one across events)
             return False
-        self.allocs[rid] += self._take(need)
+        self.allocs[rid] += self._take(need, offset=len(self.allocs[rid]))
         return True
 
     def release(self, rid: int) -> List[int]:
@@ -203,11 +317,14 @@ class BlockManager:
         blocks still referenced by a prefix-sharing sibling survive, along
         with their published hashes.  A dead block's hash entries are
         retired with it (sharing happens across *resident* requests only)
-        — but a hash-published block is first offered to the host tier via
-        ``demote_cb`` (called before the block can be reallocated, so its
-        page content is still intact when the callback copies it out).
+        — but hash-published blocks are first offered to the host tier via
+        ONE ``demote_cb(dying)`` call covering every such block of this
+        release (before any of them can be reallocated, so their page
+        content is still intact when the callback gathers it out in a
+        single batched device->host read).
         """
         freed: List[int] = []
+        dying: List[Tuple[int, int, tuple]] = []
         for b in self.allocs.pop(rid, []):
             self.ref[b] -= 1
             if self.ref[b] == 0:
@@ -217,10 +334,14 @@ class BlockManager:
                 if h is not None and self.by_hash.get(h) == b:
                     del self.by_hash[h]
                     if self.demote_cb is not None and toks is not None:
-                        self.demote_cb(b, h, toks)
-                self.free_blocks.append(b)
+                        dying.append((b, h, toks))
                 freed.append(b)
+        if dying:
+            self.demote_cb(dying)
+        for b in freed:
+            self.shard_free[self.shard_of(b)].append(b)
         self.virtual_tokens.pop(rid, None)
+        self.virtual_offset.pop(rid, None)
         return freed
 
     # ------------------------------------------------- prefix sharing / CoW
@@ -270,16 +391,18 @@ class BlockManager:
         """Copy-on-write split of ``rid``'s idx-th block when shared.
 
         If the block is exclusively held, returns None (write away).
-        Otherwise pops a fresh block, drops one reference on the shared
-        block (it cannot die — someone else still holds it) and swaps the
-        fresh id into ``rid``'s list, returning ``(src, dst)`` so the
-        caller can copy the physical page (PagedKVCache.copy_within).
-        Callers must check ``n_free`` (preempting if needed) before any
-        write that may CoW."""
+        Otherwise pops a fresh block — from the shard stripe position
+        ``idx`` maps to, so the copy stays device-local — drops one
+        reference on the shared block (it cannot die — someone else still
+        holds it) and swaps the fresh id into ``rid``'s list, returning
+        ``(src, dst)`` so the caller can copy the physical page
+        (PagedKVCache.copy_within).  Callers must check capacity
+        (``can_take_at``, preempting if needed) before any write that may
+        CoW."""
         b = self.allocs[rid][idx]
         if self.ref[b] == 1:
             return None
-        new = self._take(1)[0]
+        new = self._take(1, offset=idx)[0]
         self.ref[b] -= 1
         self.allocs[rid][idx] = new
         self.stats["cow"] += 1
@@ -304,23 +427,74 @@ class PagedKVCache:
     XLA aliases the buffers in place instead of functionally rebuilding
     them — never keep an external reference to a pool array across a
     write (see kernels/flash_decode.py).
+
+    With ``kv_shards > 1`` the pools carry a device axis — per layer
+    ``(n_blocks, kv_shards, blocks_per_shard + 1, block_size, KVH, D)``
+    placed over ``shard_axis`` of ``mesh`` — and every write/copy/gather
+    runs as a shard_map body that keeps pages device-local
+    (kernels/flash_decode.py ``shard_*`` helpers).  Block ids handed in
+    are still the BlockManager's *global* striped ids; this class converts
+    them to (shard, local) internally.
     """
 
     def __init__(self, cfg, total_blocks: int, block_size: int,
-                 dtype: Optional[str] = None):
+                 dtype: Optional[str] = None, kv_shards: int = 1,
+                 mesh=None, shard_axis: Optional[str] = None):
+        import jax
         import jax.numpy as jnp
         self.cfg = cfg
         self.total_blocks = total_blocks
         self.block_size = block_size
-        self.scratch_block = total_blocks       # extra page for padded rows
+        self.kv_shards = kv_shards
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.scratch_block = total_blocks       # global scratch id
         self.attn_layers = [i for i, s in enumerate(cfg.pattern)
                             if s.mixer == "attn"]
         dt = jnp.dtype(dtype or cfg.dtype)
         nb, kvh, dh = cfg.n_blocks, cfg.n_kv_heads, cfg.head_dim_
-        shape = (nb, total_blocks + 1, block_size, kvh, dh)
-        self.pools = {str(i): {"k": jnp.zeros(shape, dt),
-                               "v": jnp.zeros(shape, dt)}
+        if kv_shards == 1:
+            shape = (nb, total_blocks + 1, block_size, kvh, dh)
+            self.blocks_per_shard = total_blocks
+            make = lambda: jnp.zeros(shape, dt)
+        else:
+            assert mesh is not None and shard_axis is not None, \
+                "a sharded pool needs a mesh and an axis to shard over"
+            assert total_blocks % kv_shards == 0, (total_blocks, kv_shards)
+            self.blocks_per_shard = total_blocks // kv_shards
+            # one scratch page PER SHARD (local id blocks_per_shard)
+            shape = (nb, kv_shards, self.blocks_per_shard + 1,
+                     block_size, kvh, dh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            sh = NamedSharding(mesh, P(None, shard_axis))
+            make = lambda: jax.device_put(jnp.zeros(shape, dt), sh)
+        self.pools = {str(i): {"k": make(), "v": make()}
                       for i in self.attn_layers}
+
+    # -------------------------------------------------- sharded id helpers
+    def _local(self, block: int) -> Tuple[int, int]:
+        """Global block id -> (shard, local page id)."""
+        if block == self.scratch_block:
+            return 0, self.blocks_per_shard
+        return divmod(block, self.blocks_per_shard)
+
+    def _group_by_shard(self, blocks: Sequence[int]
+                        ) -> Tuple[np.ndarray, List[List[int]]]:
+        """Group global ids by shard: returns (kv_shards, m_max) local ids
+        (scratch-padded) plus, per shard, the original positions of its
+        entries — so callers can route per-position payloads."""
+        n = self.kv_shards
+        local: List[List[int]] = [[] for _ in range(n)]
+        idxs: List[List[int]] = [[] for _ in range(n)]
+        for j, b in enumerate(blocks):
+            s, l = self._local(int(b))
+            local[s].append(l)
+            idxs[s].append(j)
+        m = max((len(l) for l in local), default=0) or 1
+        out = np.full((n, m), self.blocks_per_shard, np.int32)
+        for s in range(n):
+            out[s, :len(local[s])] = local[s]
+        return out, idxs
 
     # ------------------------------------------------------------- prefill
     def write_chunk(self, blocks: List[int], new_caches: dict,
@@ -336,11 +510,31 @@ class PagedKVCache:
         (3, 1, L) for M-RoPE).  Tokens land at their logical position, so
         pages stay in natural order regardless of chunk storage order."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import scatter_kv_chunk
+        from repro.kernels.flash_decode import (scatter_kv_chunk,
+                                                shard_scatter_kv_chunk)
         if not self.attn_layers:
             return
         pos2d = positions[0] if positions.ndim == 3 else positions
         pos = jnp.asarray(pos2d[0], jnp.int32)               # (L,)
+        if self.kv_shards > 1:
+            # striped pool: local_pages[s, j] holds the local id of the
+            # allocation's logical page j * kv_shards + s; each shard's
+            # shard_map body scatters only the tokens whose page it owns
+            n = self.kv_shards
+            assert all(self._local(int(b))[0] == j % n
+                       for j, b in enumerate(blocks)), "stripe drift"
+            lp = jnp.asarray(shard_block_table(
+                np.asarray(blocks, np.int32)[None], n,
+                self.blocks_per_shard)[:, 0])
+            for i in self.attn_layers:
+                ent = new_caches[str(i)]["self"]
+                self.pools[str(i)]["k"] = shard_scatter_kv_chunk(
+                    self.pools[str(i)]["k"], lp, ent["k"][:, 0], pos,
+                    mesh=self.mesh, axis=self.shard_axis)
+                self.pools[str(i)]["v"] = shard_scatter_kv_chunk(
+                    self.pools[str(i)]["v"], lp, ent["v"][:, 0], pos,
+                    mesh=self.mesh, axis=self.shard_axis)
+            return
         blk = jnp.asarray(blocks, jnp.int32)
         for i in self.attn_layers:
             ent = new_caches[str(i)]["self"]
@@ -361,15 +555,46 @@ class PagedKVCache:
         swap-in or second-tier prefix-cache promotion.  Host sources are
         sliced on the host first, so only the needed pages cross PCIe
         (``scatter_kv_blocks``); device sources stay on-device
-        (``copy_kv_blocks``).  Both paths donate this pool's buffers."""
+        (``copy_kv_blocks``).  Both paths donate this pool's buffers.
+
+        When both pools are sharded over the same shard count the copy is
+        fully device-local (stripe alignment: logical page i sits on shard
+        ``i % kv_shards`` in both pools); host and unsharded-device
+        sources are re-grouped per shard first."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import (copy_kv_blocks,
-                                                scatter_kv_blocks)
-        src_list = list(src_blocks)
-        dst_ids = jnp.asarray(list(dst_blocks), jnp.int32)
+        src_list = [int(b) for b in src_blocks]
+        dst_list = [int(b) for b in dst_blocks]
         if not src_list:
             return
+        if self.kv_shards > 1:
+            self._copy_from_sharded(src, src_list, dst_list)
+            return
+        from repro.kernels.flash_decode import (copy_kv_blocks,
+                                                scatter_kv_blocks,
+                                                shard_gather_kv_blocks)
+        dst_ids = jnp.asarray(dst_list, jnp.int32)
         src_ids = jnp.asarray(src_list, jnp.int32)
+        src_sharded = getattr(src, "kv_shards", 1) > 1
+        if src_sharded:
+            # sharded source -> unsharded destination: per-shard gather,
+            # device-side reorder into logical order (GSPMD collectives,
+            # never through host memory), then scatter
+            local, idxs = src._group_by_shard(src_list)
+            m = local.shape[1]
+            flat_idx = np.zeros(len(src_list), np.int64)
+            for s in range(src.kv_shards):
+                for t, j in enumerate(idxs[s]):
+                    flat_idx[j] = s * m + t
+            lids, fidx = jnp.asarray(local), jnp.asarray(flat_idx)
+            for i in self.attn_layers:
+                for part in ("k", "v"):
+                    g = shard_gather_kv_blocks(
+                        src.pools[str(i)][part], lids,
+                        mesh=src.mesh, axis=src.shard_axis)
+                    pages = g.reshape((g.shape[0], -1) + g.shape[3:])[:, fidx]
+                    self.pools[str(i)][part] = scatter_kv_blocks(
+                        self.pools[str(i)][part], dst_ids, pages)
+            return
         for i in self.attn_layers:
             for part in ("k", "v"):
                 sp = src.pools[str(i)][part]
@@ -381,14 +606,98 @@ class PagedKVCache:
                     self.pools[str(i)][part] = copy_kv_blocks(
                         self.pools[str(i)][part], sp, src_ids, dst_ids)
 
+    def _copy_from_sharded(self, src, src_list: List[int],
+                           dst_list: List[int]) -> None:
+        """``copy_from`` into a sharded pool.  Three source layouts:
+        same-count sharded device pool (device-local page copies), host
+        numpy pool (per-shard page slices scattered across PCIe), and
+        unsharded device pool (pages gathered then re-grouped per shard)."""
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import (gather_kv_blocks,
+                                                shard_copy_kv_blocks,
+                                                shard_scatter_kv_blocks)
+        n = self.kv_shards
+        dst_local, dst_idxs = self._group_by_shard(dst_list)
+        src_sharded = getattr(src, "kv_shards", 1) > 1
+        if src_sharded:
+            if src.kv_shards != n:
+                raise ValueError(
+                    f"cannot copy pages between pools sharded {src.kv_shards}"
+                    f"-way and {n}-way: stripe layouts do not line up")
+            # stripe alignment makes every pair same-shard: regroup the
+            # src ids by the DST grouping and assert the shards agree
+            m = dst_local.shape[1]
+            src_local = np.full((n, m), self.blocks_per_shard, np.int32)
+            for s in range(n):
+                for t, j in enumerate(dst_idxs[s]):
+                    ss, sl = src._local(src_list[j])
+                    assert ss == s, "cross-shard page copy (stripe drift)"
+                    src_local[s, t] = sl
+            src_local = jnp.asarray(src_local)
+            dl = jnp.asarray(dst_local)
+            for i in self.attn_layers:
+                for part in ("k", "v"):
+                    self.pools[str(i)][part] = shard_copy_kv_blocks(
+                        self.pools[str(i)][part], src.pools[str(i)][part],
+                        src_local, dl, mesh=self.mesh, axis=self.shard_axis)
+            return
+        # host numpy / unsharded device source: build per-shard page
+        # payloads (nb, n, m_max, page, KVH, D) in dst grouping order
+        m = dst_local.shape[1]
+        dl = jnp.asarray(dst_local)
+        host_src = isinstance(next(iter(src.pools.values()))["k"], np.ndarray)
+        for i in self.attn_layers:
+            for part in ("k", "v"):
+                sp = src.pools[str(i)][part]
+                if host_src:
+                    nb = sp.shape[0]
+                    pages = np.zeros((nb, n, m) + sp.shape[2:], sp.dtype)
+                    for s in range(n):
+                        ids = [src_list[j] for j in dst_idxs[s]]
+                        if ids:
+                            pages[:, s, :len(ids)] = sp[:, ids]
+                    pages = jnp.asarray(pages)
+                else:
+                    g = gather_kv_blocks(sp, jnp.asarray(src_list, jnp.int32))
+                    idx = np.zeros((n, m), np.int64)
+                    for s in range(n):
+                        idx[s, :len(dst_idxs[s])] = dst_idxs[s]
+                    pages = g[:, jnp.asarray(idx)]   # pad copies page 0 ->
+                    #                                  local scratch: harmless
+                self.pools[str(i)][part] = shard_scatter_kv_blocks(
+                    self.pools[str(i)][part], dl, pages,
+                    mesh=self.mesh, axis=self.shard_axis)
+
     def read_blocks(self, blocks: Iterable[int]) -> Dict[str, dict]:
         """Gather whole pages into host (numpy) arrays — the staging read
         of a swap-out or host demotion.  Layout mirrors the pools:
         {layer: {"k"/"v": (nb, n, page, KVH, D)}}, consumable by
-        ``kv_offload.HostKVPool.store``."""
+        ``kv_offload.HostKVPool.store``.  For a sharded pool the gather
+        runs per shard (one shard_map read) and the pages are re-ordered
+        into logical order host-side."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import gather_kv_blocks
-        ids = jnp.asarray(list(blocks), jnp.int32)
+        from repro.kernels.flash_decode import (gather_kv_blocks,
+                                                shard_gather_kv_blocks)
+        ids_list = [int(b) for b in blocks]
+        if self.kv_shards > 1:
+            local, idxs = self._group_by_shard(ids_list)
+            lids = jnp.asarray(local)
+            out = {}
+            for i in self.attn_layers:
+                ent = {}
+                for part in ("k", "v"):
+                    g = np.asarray(shard_gather_kv_blocks(
+                        self.pools[str(i)][part], lids,
+                        mesh=self.mesh, axis=self.shard_axis))
+                    pages = np.empty((g.shape[0], len(ids_list))
+                                     + g.shape[3:], g.dtype)
+                    for s in range(self.kv_shards):
+                        for t, j in enumerate(idxs[s]):
+                            pages[:, j] = g[:, s, t]
+                    ent[part] = pages
+                out[str(i)] = ent
+            return out
+        ids = jnp.asarray(ids_list, jnp.int32)
         return {str(i): {part: np.asarray(gather_kv_blocks(
                     self.pools[str(i)][part], ids))
                 for part in ("k", "v")}
@@ -396,9 +705,27 @@ class PagedKVCache:
 
     def copy_within(self, src_block: int, dst_block: int) -> None:
         """Duplicate one page inside the pool — the physical half of a
-        copy-on-write split (BlockManager.ensure_writable)."""
+        copy-on-write split (BlockManager.ensure_writable).  On a sharded
+        pool source and destination sit on the same shard (the CoW
+        replacement comes from the same stripe position), so the copy is
+        device-local; every other shard copies scratch onto scratch."""
         import jax.numpy as jnp
-        from repro.kernels.flash_decode import copy_kv_block_within
+        from repro.kernels.flash_decode import (copy_kv_block_within,
+                                                shard_copy_kv_block_within)
+        if self.kv_shards > 1:
+            ss, sl = self._local(src_block)
+            ds, dl = self._local(dst_block)
+            assert ss == ds, "CoW split must stay on one shard"
+            src = np.full((self.kv_shards,), self.blocks_per_shard, np.int32)
+            dst = src.copy()
+            src[ss], dst[ss] = sl, dl
+            src, dst = jnp.asarray(src), jnp.asarray(dst)
+            for i in self.attn_layers:
+                for part in ("k", "v"):
+                    self.pools[str(i)][part] = shard_copy_kv_block_within(
+                        self.pools[str(i)][part], src, dst,
+                        mesh=self.mesh, axis=self.shard_axis)
+            return
         s = jnp.asarray(src_block, jnp.int32)
         d = jnp.asarray(dst_block, jnp.int32)
         for i in self.attn_layers:

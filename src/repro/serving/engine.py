@@ -58,11 +58,14 @@ Per-chunk timing is exposed in ``chunk_log`` / ``Request.chunk_sched`` /
 ``Request.chunk_exec``, and decode preemptions in ``preempt_log``, so
 benchmarks can compare executed against simulated TTFT/TBT and track
 memory-pressure behaviour.  On CPU this serves reduced models end-to-end
-(tests/test_engine, tests/test_paged_engine); on TPU the same engine
-executes on sharded meshes via the ExecContext — except that the paged
-decode pools are per-instance and do not yet compose with
-``ctx.kv_split_axis`` split-KV decode (models/attention.py raises loudly
-on that combination; see ROADMAP).
+(tests/test_engine, tests/test_paged_engine); on distributed meshes the
+paged pools themselves go sequence-parallel: the prefill pool stripes
+over ``ctx.sp_axis`` (chunks run ring attention and each shard's history
+pages rotate through the ring — core/ring_attention.ring_paged_prefill)
+and each decode pool stripes over ``ctx.kv_split_axis`` (split-KV paged
+decode island, per-shard partial softmax + LSE merge —
+core/ring_attention.sharded_paged_decode), with every page write/copy
+staying device-local (serving/cache_manager, tests/dist_progs).
 """
 
 from __future__ import annotations
@@ -141,17 +144,24 @@ class PagedDecodeState:
 
     def __init__(self, cfg: ModelConfig, max_batch: int, max_seq: int,
                  block_size: int = 64, n_backends: int = 8,
-                 bandwidth: float = 40e9):
+                 bandwidth: float = 40e9, ctx: ExecContext = CPU_CTX):
         assert max_seq % block_size == 0, (max_seq, block_size)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.block_size = block_size
+        # split-KV sharded pool: stripe the block pool over the context's
+        # decode KV axis (pool rounded up to a whole number of stripes)
+        self.kv_shards = ctx.pool_shards("decode")
         total_blocks = max_batch * max_seq // block_size
+        total_blocks = -(-total_blocks // self.kv_shards) * self.kv_shards
         self.blocks = BlockManager(total_blocks=total_blocks,
-                                   block_size=block_size)
+                                   block_size=block_size,
+                                   kv_shards=self.kv_shards)
         self.kv = PagedKVCache(cfg, total_blocks, block_size,
-                               dtype=cfg.dtype)
+                               dtype=cfg.dtype, kv_shards=self.kv_shards,
+                               mesh=ctx.mesh if self.kv_shards > 1 else None,
+                               shard_axis=ctx.pool_axis("decode"))
         self.slots: List[Optional[int]] = [None] * max_batch   # row -> rid
         self.meta: Dict[int, _DecodeMeta] = {}
         self.aux: Dict[int, dict] = {}     # rid -> non-attn cache tree (B=1)
@@ -251,12 +261,19 @@ class PagedDecodeState:
     def block_table(self, active: List[int]):
         """(max_batch, max_blocks) physical page table sized to the longest
         *live allocation* (not max_seq); inactive rows point at the scratch
-        page so their writes can never corrupt live data."""
+        page so their writes can never corrupt live data.  On a sharded
+        pool the global striped ids are converted to the per-shard local
+        tables (kv_shards, max_batch, npg_local) the split-KV decode
+        island consumes."""
+        from repro.serving.cache_manager import shard_block_table
         maxb = max(len(self.meta[r].blocks) for r in active)
         bt = np.full((self.max_batch, maxb), self.kv.scratch_block, np.int32)
         for r in active:
             m = self.meta[r]
             bt[m.row, :len(m.blocks)] = m.blocks
+        if self.kv_shards > 1:
+            bt = shard_block_table(bt, self.kv_shards,
+                                   self.blocks.blocks_per_shard)
         return jnp.asarray(bt)
 
     def build_caches(self, active: List[int], bt) -> dict:
@@ -369,9 +386,24 @@ class ServingEngine(Simulator):
         self.outputs: Dict[int, List[int]] = {}
         self.chunk_log: Dict[int, List[dict]] = {}
         self.preempt_log: List[dict] = []
+        # sequence-parallel sharded pools: prefill stripes over sp_axis
+        # (ring-paged history), decode over kv_split_axis (split-KV paged
+        # decode).  Admission moves pages between the two pools with
+        # device-local stripe-aligned copies, so active shard counts must
+        # agree.
+        n_sp = ctx.pool_shards("prefill")
+        n_kv = ctx.pool_shards("decode")
+        if n_sp > 1 and n_kv > 1 and n_sp != n_kv:
+            raise ValueError(
+                f"prefill pool shards ({n_sp} over sp_axis="
+                f"{ctx.sp_axis!r}) and decode pool shards ({n_kv} over "
+                f"kv_split_axis={ctx.kv_split_axis!r}) must match: "
+                "admission hands striped pages between the pools "
+                "device-locally.  Use equal-size axes (e.g. "
+                "make_context(mesh, 'serve_paged')).")
         self.dstates = [PagedDecodeState(cfg, max_batch, max_seq, block_size,
                                          n_backends=spec.backends_per_decode,
-                                         bandwidth=spec.transfer_bw)
+                                         bandwidth=spec.transfer_bw, ctx=ctx)
                         for _ in range(spec.n_decode)]
         # engine-wide prefill page pool: chunks scatter their KV here as
         # they execute; admission copies the non-shared pages into the
@@ -379,10 +411,13 @@ class ServingEngine(Simulator):
         if prefill_pool_blocks is None:
             prefill_pool_blocks = max(
                 1, spec.n_prefill * max_seq // block_size)
+        prefill_pool_blocks = -(-prefill_pool_blocks // n_sp) * n_sp
         self.pblocks = BlockManager(total_blocks=prefill_pool_blocks,
-                                    block_size=block_size)
+                                    block_size=block_size, kv_shards=n_sp)
         self.pkv = PagedKVCache(cfg, prefill_pool_blocks, block_size,
-                                dtype=cfg.dtype)
+                                dtype=cfg.dtype, kv_shards=n_sp,
+                                mesh=ctx.mesh if n_sp > 1 else None,
+                                shard_axis=ctx.pool_axis("prefill"))
         # host offload tier: numpy mirror pool shared by swap records and
         # the LRU second-tier prefix cache; demotions hook BlockManager
         # releases per decode instance
@@ -397,7 +432,7 @@ class ServingEngine(Simulator):
                                     spec.kv_bytes_per_token)
             for did, d in enumerate(self.dstates):
                 d.blocks.demote_cb = functools.partial(
-                    self._demote_block, did)
+                    self._demote_blocks, did)
         else:
             if preempt_policy == "swap":
                 raise ValueError(
@@ -407,6 +442,7 @@ class ServingEngine(Simulator):
             self.host_cache = None
             self.swap = None
         self._suppress_demote = False       # during swap-out evictions
+        self._demote_gathers = 0            # batched device->host reads
         self._prefill: Dict[int, _PrefillState] = {}
         self._preempt_flags: set = set()          # mid-prefill
         self._decode_preempt_flags: set = set()   # decode, at next tick
@@ -690,7 +726,8 @@ class ServingEngine(Simulator):
         shared, shared_tok = (d.plan_share(seq, hashes)
                               if self.prefix_sharing else ([], 0))
         fresh = d.blocks.blocks_for(resident) - len(shared)
-        if not d.blocks.reserve_virtual(rid, fresh * d.block_size):
+        if not d.blocks.reserve_virtual(rid, fresh * d.block_size,
+                                        offset=len(shared)):
             # decode instance saturated: hold the backend, retry shortly
             # (a failed reserve leaves no virtual entry behind; the share
             # plan is recomputed from scratch on the retry)
@@ -742,6 +779,20 @@ class ServingEngine(Simulator):
     def _watermark_blocks(self, d: PagedDecodeState) -> int:
         return int(np.ceil(self.preempt_watermark * d.blocks.total_blocks))
 
+    def _host_cached_tokens(self, d: PagedDecodeState, rid: int) -> int:
+        """Tokens of ``rid``'s resume sequence already held by the host
+        prefix cache (chained-hash walk, no LRU/stat side effects) — the
+        part of a recompute whose KV admission would promote instead of
+        copying.  Used only to price the ``auto`` policy compare."""
+        if self.host_cache is None or not self.prefix_sharing:
+            return 0
+        m = d.meta[rid]
+        seq = np.asarray(m.tokens[:m.cache_len])
+        hashes = block_hashes(seq, d.block_size)
+        hits = self.host_cache.match_chain(hashes, seq, 0, d.block_size,
+                                           peek=True)
+        return len(hits) * d.block_size
+
     def _preempt_choice(self, d: PagedDecodeState, rid: int) -> tuple:
         """Resolve the preemption policy for one victim.
 
@@ -752,16 +803,24 @@ class ServingEngine(Simulator):
         ``swap`` / ``recompute`` short-circuit the compare but still
         report both costs so ``preempt_log`` lets benchmarks audit the
         decision.  ``resume_tokens`` is the length the recompute cost was
-        priced on — exactly what a recompute preemption re-prefills."""
+        priced on — exactly what a recompute preemption re-prefills.
+        Host-prefix-cache hits on the resume sequence discount the
+        recompute estimate (their pages promote back over PCIe instead of
+        being re-copied at admission), so ``auto`` stops over-preferring
+        swap for victims whose prefix survived an earlier eviction."""
         req = self.reqs[rid]
         outs = self.outputs[rid]
         resume = req.prompt_len + (len(outs) - 1 if len(outs) > 1 else 0)
         if self.swap is None:
             return "recompute", float("inf"), 0.0, resume
+        # the cache walk (O(cache_len) hashing) only matters when the
+        # verdict is actually decided by the compare
+        cached = (self._host_cached_tokens(d, rid)
+                  if self.preempt_policy == "auto" else 0)
         policy, swap_ms, rec_ms = choose_preempt_policy(
             len(d.meta[rid].blocks), d.block_size,
             self.spec.kv_bytes_per_token, resume,
-            self.policy.model, self.swap.model)
+            self.policy.model, self.swap.model, cached_tokens=cached)
         if self.preempt_policy != "auto":
             policy = self.preempt_policy
         return policy, swap_ms, rec_ms, resume
@@ -836,27 +895,44 @@ class ServingEngine(Simulator):
         self._push(now, "requeue", rid)
 
     # ----------------------------------------------------- host swap tier
-    def _demote_block(self, did: int, block: int, h: int,
-                      tokens: tuple) -> None:
-        """BlockManager demote hook: a hash-published block's last device
-        reference died — copy its page into the host prefix cache before
-        the block can be reallocated, so the prefix stays matchable.
-        Suppressed during swap-out evictions (the SwapManager already
-        holds the victim's full copy and will restore + republish it)."""
+    def _demote_blocks(self, did: int, dying: List[tuple]) -> None:
+        """BlockManager demote hook: hash-published blocks whose last
+        device reference died in one release — copy their pages into the
+        host prefix cache before any of them can be reallocated, so the
+        prefixes stay matchable.  All pages move in a SINGLE batched
+        device->host gather (one PCIe read per release, not one per
+        block: a finishing 128K context used to pay hundreds of tiny
+        staging reads here).  Suppressed during swap-out evictions (the
+        SwapManager already holds the victim's full copy and will restore
+        + republish it)."""
         if self.host_cache is None or self._suppress_demote:
             return
-        if h in self.host_cache.entries:
-            self.host_cache.put(h, tokens, {})    # LRU refresh, no copy
+        fresh: List[tuple] = []
+        for b, h, tokens in dying:
+            if h in self.host_cache.entries:
+                self.host_cache.put(h, tokens, {})    # LRU refresh, no copy
+            else:
+                fresh.append((b, h, tokens))
+        if not fresh:
             return
         if self.host.n_free == 0 and not self.host_cache.entries:
-            # pool fully pinned by swap records: the put below could only
+            # pool fully pinned by swap records: the puts below could only
             # reject — skip the device->host page gather entirely
-            self.host_cache.stats["rejected"] += 1
+            self.host_cache.stats["rejected"] += len(fresh)
             return
         d = self.dstates[did]
-        if self.host_cache.put(h, tokens, d.kv.read_blocks([block])):
+        pages = d.kv.read_blocks([b for b, _, _ in fresh])
+        self._demote_gathers += 1
+        stored = 0
+        for j, (b, h, tokens) in enumerate(fresh):
+            data = {layer: {part: arr[:, j:j + 1]
+                            for part, arr in parts.items()}
+                    for layer, parts in pages.items()}
+            if self.host_cache.put(h, tokens, data):
+                stored += 1
+        if stored:
             d.transfers.note_swap("demote", TransferManager.swap_bytes(
-                1, d.block_size, self.spec.kv_bytes_per_token))
+                stored, d.block_size, self.spec.kv_bytes_per_token))
 
     def _swap_out(self, now: float, rid: int) -> bool:
         """Move a victim's resident KV pages to the host tier and park its
@@ -946,7 +1022,15 @@ class ServingEngine(Simulator):
         """Swap-in landed: commit the reserved blocks, scatter the host
         pages back into the pool, rebuild the decode meta and rejoin the
         continuous batch — cache_len/last_token/outputs are exactly what
-        they were at swap-out, so generation resumes token-for-token."""
+        they were at swap-out, so generation resumes token-for-token.
+
+        **Swap-in re-sharing**: before committing, the same ``plan_share``
+        pass admission runs matches the returning prefix against the
+        residents — blocks a sibling still holds are committed *by
+        reference* (the reservation shrinks to the fresh remainder and
+        only the non-shared host pages are scattered back), so a swap
+        round trip no longer duplicates a prefix that never left the
+        device."""
         rec = self.swap.records[rid]
         if rec.row is None:
             # reservation was reclaimed by resident growth mid-flight
@@ -955,18 +1039,32 @@ class ServingEngine(Simulator):
         req = self.reqs[rid]
         d, inst = self.dstates[rec.did], self.decodes[rec.did]
         del self.swap.records[rid]
-        blocks = d.blocks.commit(rid)
-        d.kv.copy_from(self.host, rec.host_blocks, blocks)
+        seq = np.asarray(rec.tokens[:rec.cache_len])
+        hashes = (block_hashes(seq, d.block_size) if self.prefix_sharing
+                  else [])
+        shared, shared_tok = (d.plan_share(seq, hashes)
+                              if self.prefix_sharing else ([], 0))
+        if shared:
+            # shrink the reservation to the fresh remainder; the take over
+            # a stripe-suffix of the reserved positions is always covered
+            need = d.blocks.blocks_for(rec.cache_len) - len(shared)
+            d.blocks.virtual_tokens[rid] = need * d.block_size
+            d.blocks.virtual_offset[rid] = len(shared)
+            self.swap.counters["swap_in_shared_blocks"] += len(shared)
+        blocks = d.blocks.commit(rid, shared=shared)
+        d.kv.copy_from(self.host, rec.host_blocks[len(shared):],
+                       blocks[len(shared):])
         self.host.free(rec.host_blocks)
         d.insert(rec.row, rid, rec.aux, rec.cache_len, rec.last_token,
-                 blocks, 0, rec.tokens)
+                 blocks, shared_tok, rec.tokens)
         if self.prefix_sharing:
             # republish the full blocks so sharing (and demotability)
-            # survive the round trip; shared-capacity credit restarts at 0
-            hashes = block_hashes(np.asarray(rec.tokens), d.block_size)
+            # survive the round trip
             d.blocks.register_hashes(rid, hashes, tokens=rec.tokens)
-            d.meta[rid].hashes = hashes
+            d.meta[rid].hashes = list(hashes)
         inst.swap_in_done(req, rec.cache_len)
+        if shared_tok:
+            inst.credit_shared(shared_tok)
         self.swap.counters["swap_ins"] += 1
         req.phase = Phase.DECODE
         inst.batch.append(req)
@@ -990,6 +1088,7 @@ class ServingEngine(Simulator):
                 d.slots[rec.row] = None
                 rec.row = None
                 d.blocks.virtual_tokens.pop(rid, None)
+                d.blocks.virtual_offset.pop(rid, None)
                 inst.swap_in_cancel(self.reqs[rid], rec.cache_len)
                 return True
         return False
@@ -1001,11 +1100,13 @@ class ServingEngine(Simulator):
         second-tier prefix cache's demotions/hits/evictions."""
         out = {"swap_outs": 0, "swap_ins": 0, "bytes_out": 0.0,
                "bytes_in": 0.0, "fallback_recompute": 0, "swapped_now": 0,
+               "swap_in_shared_blocks": 0, "demote_gathers": 0,
                "host_blocks_in_use": 0, "host_peak_blocks": 0,
                "demotions": 0, "host_prefix_hits": 0, "cache_evictions": 0}
         if self.swap is None:
             return out
         out.update(self.swap.counters)
+        out["demote_gathers"] = self._demote_gathers
         out["swapped_now"] = len(self.swap.records)
         out["host_blocks_in_use"] = (self.host.total_blocks
                                      - self.host.n_free)
@@ -1056,11 +1157,17 @@ class ServingEngine(Simulator):
                             if r is not None and r in d.meta]
                 floor = wm if len(resident) > 1 else 0
                 # growth sees only blocks not promised to an in-flight
-                # swap-in; reclaim those reservations before anyone falls
+                # swap-in; reclaim those reservations before anyone falls.
+                # ``fits`` is the per-shard exact check — a striped pool
+                # can exhaust the target shard while others still have
+                # room; the watermark heuristic stays total-block based
                 eff = bm.n_free - bm.virtual_blocks
-                if eff - need < floor and self._cancel_pending_swap_ins(did):
+                fits = (bm.can_take_at(m.cache_len // bm.block_size)
+                        if cow else bm.can_extend(rid, m.cache_len + 1))
+                if ((not fits or eff - need < floor)
+                        and self._cancel_pending_swap_ins(did)):
                     continue
-                if len(resident) <= 1 or eff - need >= floor:
+                if len(resident) <= 1 or (fits and eff - need >= floor):
                     # a lone resident may dip below the watermark; its
                     # worst case is pool-bounded by submit(), so a failed
                     # extend here is an accounting bug, not a full pool
@@ -1076,7 +1183,8 @@ class ServingEngine(Simulator):
                              key=lambda r: (self.reqs[r].arrival, r))
                 self._preempt_decode(
                     now, victim,
-                    reason="exhaustion" if eff < need else "watermark")
+                    reason=("exhaustion" if eff < need or not fits
+                            else "watermark"))
                 if victim == rid:
                     break
 

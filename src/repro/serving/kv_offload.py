@@ -109,7 +109,8 @@ class HostKVPool:
 def choose_preempt_policy(
         n_blocks: int, block_size: int, kv_bytes_per_token: float,
         resume_tokens: int, prefill_model: PrefillLatencyModel,
-        offload_model: HostOffloadModel) -> Tuple[str, float, float]:
+        offload_model: HostOffloadModel,
+        cached_tokens: int = 0) -> Tuple[str, float, float]:
     """The ``auto`` preemption policy's per-victim cost compare.
 
     Returns ``(policy, swap_in_ms, recompute_ms)``: the modeled PCIe time
@@ -117,12 +118,25 @@ def choose_preempt_policy(
     the modeled prefill time (Eq. 1, best SP, no history) to recompute its
     ``resume_tokens``-long resume sequence.  Short prefixes recompute
     almost for free; long ones are exactly where recompute burns the
-    FLOPs the saturated cluster needs — swap wins there."""
+    FLOPs the saturated cluster needs — swap wins there.
+
+    ``cached_tokens`` is the prefix of the resume sequence whose pages the
+    host prefix cache already holds: on a recompute path their KV comes
+    back as a page-granular promotion at admission, so the recompute
+    estimate prices only the uncached remainder's prefill plus the PCIe
+    promotion of the cached pages — without this discount ``auto``
+    over-prefers swap exactly for the victims whose prefix survived an
+    earlier eviction."""
     n_bytes = n_blocks * block_size * kv_bytes_per_token
     swap_ms = offload_model.swap_time(n_bytes) * 1e3
-    L = max(resume_tokens, 1)
+    cached = min(max(cached_tokens, 0), resume_tokens)
+    L = max(resume_tokens - cached, 1)
     rec_ms = prefill_model.latency(
         prefill_model.optimal_sp(L), 0.0, L) * 1e3
+    if cached:
+        promo_bytes = -(-cached // block_size) * block_size \
+            * kv_bytes_per_token
+        rec_ms += offload_model.swap_time(promo_bytes) * 1e3
     return ("swap" if swap_ms < rec_ms else "recompute"), swap_ms, rec_ms
 
 
@@ -161,7 +175,8 @@ class SwapManager:
         self.records: Dict[int, SwapRecord] = {}
         self.counters = {"swap_outs": 0, "swap_ins": 0,
                          "bytes_out": 0.0, "bytes_in": 0.0,
-                         "fallback_recompute": 0}
+                         "fallback_recompute": 0,
+                         "swap_in_shared_blocks": 0}
 
     def block_bytes(self, n_blocks: int) -> float:
         """Wire bytes for ``n_blocks`` whole pages (one direction) — the
@@ -232,13 +247,16 @@ class HostPrefixCache:
         return True
 
     def match_chain(self, hashes: Sequence[int], seq: np.ndarray,
-                    start: int, block_size: int) -> List[int]:
+                    start: int, block_size: int,
+                    peek: bool = False) -> List[int]:
         """Longest run of cached host blocks continuing the chain.
 
         ``hashes`` are the request's chained block hashes from position
         ``start`` on (the device match covered ``[0, start)``); each hit
         must also match the stored token content of the demoted block.
-        Returns the host block ids in natural order; hits refresh LRU."""
+        Returns the host block ids in natural order; hits refresh LRU.
+        ``peek=True`` is a side-effect-free probe (no LRU refresh, no hit
+        counting) — used by the ``auto`` preemption cost model."""
         out: List[int] = []
         for i, h in enumerate(hashes):
             ent = self.entries.get(h)
@@ -246,7 +264,9 @@ class HostPrefixCache:
             want = tuple(int(t) for t in seq[lo:lo + block_size])
             if ent is None or ent.tokens != want:
                 break
-            self.entries.move_to_end(h)
+            if not peek:
+                self.entries.move_to_end(h)
             out.append(ent.block)
-        self.stats["hits"] += len(out)
+        if not peek:
+            self.stats["hits"] += len(out)
         return out

@@ -1,0 +1,39 @@
+"""Shared test helper: build a sequence-parallel *striped* sharded paged
+pool from dense KV — the (n_shards, blocks_per_shard + 1, page, KVH, D) /
+(n_shards, B, npg_local) layout of serving/cache_manager.PagedKVCache.
+
+Used by the single-device layout-equivalence tests
+(test_prefix_sharing.py) and the multi-device shard_map programs
+(dist_progs/paged_sharded_prog.py), so the stripe contract — logical page
+j on shard j % n, local scratch id = blocks_per_shard — is encoded once.
+"""
+
+import numpy as np
+
+
+def stripe_pool(rng, n, k, v, page):
+    """Scatter dense (B, S, KVH, D) KV into an n-way striped pool.
+
+    Local page ids are permuted per shard so callers cover non-contiguous
+    physical layouts.  Returns numpy ``(k_pool, v_pool, tables)`` with
+    pools (n, bps + 1, page, KVH, D) and tables (n, B, npg_local) int32
+    (scratch-padded with ``bps``)."""
+    k = np.asarray(k)
+    v = np.asarray(v)
+    B, S = k.shape[:2]
+    assert S % page == 0, (S, page)
+    npg = S // page
+    npg_loc = -(-npg // n)
+    bps = B * npg_loc
+    kp = np.zeros((n, bps + 1, page) + k.shape[2:], np.float32)
+    vp = np.zeros_like(kp)
+    tables = np.full((n, B, npg_loc), bps, np.int32)
+    order = [list(rng.permutation(bps)) for _ in range(n)]
+    for b in range(B):
+        for j in range(npg):
+            s = j % n
+            lid = order[s].pop()
+            tables[s, b, j // n] = lid
+            kp[s, lid] = k[b, j * page:(j + 1) * page]
+            vp[s, lid] = v[b, j * page:(j + 1) * page]
+    return kp, vp, tables

@@ -36,13 +36,21 @@ def check_invariants(bm: BlockManager):
         assert bm.hash_of.get(b) == h
     assert bm.virtual_blocks >= 0
     assert bm.peak_in_use <= bm.total_blocks
+    # striped pools: position i of any allocation sits on shard i % n, and
+    # every free block sits on its own shard's free list
+    for blocks in bm.allocs.values():
+        for i, b in enumerate(blocks):
+            assert bm.shard_of(b) == i % bm.kv_shards, "stripe drift"
+    for s, fl in enumerate(bm.shard_free):
+        assert all(bm.shard_of(b) == s for b in fl), "free list cross-shard"
 
 
-def apply_ops(ops):
+def apply_ops(ops, kv_shards: int = 1):
     """Drive a BlockManager through a random op sequence.  Each op is
     (kind, rid, n); invalid ops (unknown rid, over-capacity asks) are
     skipped exactly like the engine guards them."""
-    bm = BlockManager(total_blocks=TOTAL, block_size=BS)
+    bm = BlockManager(total_blocks=TOTAL, block_size=BS,
+                      kv_shards=kv_shards)
     rng = np.random.default_rng(1234)
     for kind, rid, n in ops:
         if kind == 0:                                   # reserve + commit
@@ -59,7 +67,9 @@ def apply_ops(ops):
                 donor = donors[int(rng.integers(len(donors)))]
                 k = int(rng.integers(len(bm.allocs[donor]) + 1))
                 shared = bm.allocs[donor][:k]
-            if bm.reserve_virtual(rid, n):
+            # the reserve's stripe offset must match the commit-time
+            # shared-prefix length (exactly the engine's contract)
+            if bm.reserve_virtual(rid, n, offset=len(shared)):
                 bm.commit(rid, shared=shared)
         elif kind == 2:                                 # extend
             if rid in bm.allocs:
@@ -67,9 +77,11 @@ def apply_ops(ops):
         elif kind == 3:                                 # release
             bm.release(rid)
         elif kind == 4:                                 # copy-on-write
-            if rid in bm.allocs and bm.allocs[rid] and bm.n_free > 0:
+            if rid in bm.allocs and bm.allocs[rid]:
                 idx = int(rng.integers(len(bm.allocs[rid])))
-                if bm.needs_cow(rid, idx):
+                # per-shard guard: the replacement must come from the
+                # shard stripe position idx maps to (engine contract)
+                if bm.can_take_at(idx) and bm.needs_cow(rid, idx):
                     src, dst = bm.ensure_writable(rid, idx)
                     assert src != dst
                     assert bm.allocs[rid][idx] == dst
@@ -91,6 +103,47 @@ def apply_ops(ops):
                 min_size=1, max_size=60))
 def test_random_sequences_never_leak_or_double_free(ops):
     apply_ops(ops)
+
+
+@settings(max_examples=40)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(1, 4 * BS)),
+                min_size=1, max_size=60))
+def test_random_sequences_striped_pool(ops):
+    """Same invariants on a 2-way striped pool, plus: allocation position
+    i always sits on shard i % 2, CoW replacements stay on-shard, and
+    per-shard free lists never cross."""
+    apply_ops(ops, kv_shards=2)
+
+
+def test_striped_take_respects_per_shard_exhaustion():
+    """A striped pool must refuse an allocation its target shards cannot
+    serve even when the TOTAL free count would cover it — per-shard
+    accounting, not global."""
+    bm = BlockManager(total_blocks=8, block_size=4, kv_shards=2)
+    assert bm.reserve_virtual(1, 4 * 4)
+    a = bm.commit(1)                       # 2 blocks per shard used
+    assert [bm.shard_of(b) for b in a] == [0, 1, 0, 1]
+    # drain shard 0 completely via single-block allocations at offset 0
+    assert bm.reserve_virtual(2, 4) and bm.commit(2)
+    assert bm.reserve_virtual(3, 4) and bm.commit(3)
+    assert len(bm.shard_free[0]) == 0 and len(bm.shard_free[1]) == 2
+    # 2 blocks remain in total, but both on shard 1: a 2-block stripe
+    # starting at offset 0 needs one from each shard -> must not fit
+    assert not bm.can_fit(2 * 4)
+    assert not bm.reserve_virtual(4, 2 * 4)
+    # ...while a 2-block take starting at offset 1 (shards 1, 0) also
+    # fails, and a 1-block take at offset 1 (shard 1 only) succeeds
+    assert not bm.can_fit(2 * 4, offset=1)
+    assert bm.can_fit(4, offset=1)
+    # rid 1 holds 4 blocks; growing to 5 needs stripe position 4 ->
+    # shard 0, which is exhausted: extend must refuse despite free total
+    assert not bm.can_extend(1, 5 * 4)
+    assert not bm.extend(1, 5 * 4)
+    check_invariants(bm)
+    for rid in (1, 2, 3):
+        bm.release(rid)
+    assert bm.n_free == bm.total_blocks
 
 
 def test_shared_release_keeps_sibling_blocks():

@@ -57,3 +57,22 @@ def test_cdsp_submesh_rebalance():
     """Chunk on SP=2 group -> KV rebalance (device_put reshard) -> chunk on
     SP=4 superset group == monolithic prefill (paper Sec. 4.1)."""
     _run("cdsp_submesh_prog.py")
+
+
+# The sharded-paged programs force only 4 devices and run reduced shapes,
+# so they stay un-marked (not slow): the CI multi-device job runs them on
+# every PR (RUN_DIST_TESTS=1, -m "not slow").
+def test_sharded_paged_primitives_distributed():
+    """Split-KV paged decode + ring-paged prefill over a striped sharded
+    pool match the single-device paged oracle on 2- and 4-way splits
+    (appends land on the owning shard; windows mask globally)."""
+    _run("paged_sharded_prog.py")
+
+
+def test_sharded_paged_engine_distributed():
+    """The full serving engine on a 4-device mesh — prefill pool striped
+    over sp_axis (ring-paged history), decode pool over kv_split_axis
+    (split-KV island) — generates token-for-token what the single-device
+    engine and the dense oracle produce, across an SP-size change
+    mid-prefill, prefix sharing and a decode preemption."""
+    _run("paged_engine_prog.py")

@@ -129,6 +129,104 @@ def test_auto_policy_cost_crossover():
     assert swap_ms > 0.0 and rec_ms > 0.0
 
 
+def test_auto_policy_discounts_host_cached_tokens():
+    """Host-prefix-cache hits shorten the modeled recompute: the uncached
+    estimate prefers swap (quadratic re-prefill dwarfs the wire), but
+    when most of the resume sequence is promotable from the host tier the
+    discounted estimate — remainder prefill + PCIe promotion of the
+    cached pages — flips the verdict to recompute."""
+    off = HostOffloadModel(pcie_bw=1e9, base=0.0)
+    pm = PrefillLatencyModel({1: SPCoeffs(a=0.0, b=1e-7, c=0.0, d=5e-11)})
+    bs, bpt = 16, 4096.0
+    L = 100_000
+    n_blocks = L // bs
+    pol, swap0, rec0 = choose_preempt_policy(n_blocks, bs, bpt, L, pm, off)
+    assert pol == "swap" and swap0 < rec0
+    pol, swap1, rec1 = choose_preempt_policy(n_blocks, bs, bpt, L, pm, off,
+                                             cached_tokens=L // 2)
+    assert swap1 == swap0, "the swap side is unaffected by cache hits"
+    assert rec1 < rec0, "cached tokens must discount the recompute side"
+    assert pol == "recompute", \
+        "half the resume sequence cached must flip auto to recompute"
+    # the discount nets compute saved against promotion bytes shipped, so
+    # it is not monotone in cached_tokens — but any cached prefix must
+    # price below the uncached estimate while promotion stays cheaper
+    # than the compute it replaces
+    _, _, rec2 = choose_preempt_policy(n_blocks, bs, bpt, L, pm, off,
+                                       cached_tokens=3 * L // 4)
+    assert rec2 < rec0
+
+
+# ------------------------------------------------------- batched demotion
+def test_release_demotes_all_blocks_in_one_gather(reduced_params_cache):
+    """A finishing request's hash-published blocks must demote to the host
+    tier through ONE batched device->host gather, not one staging read per
+    block (a finishing 128K context used to pay hundreds of tiny PCIe
+    reads)."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        max_batch=4, max_seq=256, block_size=16)
+    rng = np.random.default_rng(71)
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=96, output_len=6),
+               rng.integers(0, cfg.vocab_size, 96).astype(np.int32))
+    eng.serve()
+    st_ = eng.swap_stats
+    assert st_["demotions"] >= 6, "96-token prompt = 6 full demoted blocks"
+    assert st_["demote_gathers"] == 1, \
+        "one release must stage exactly one batched gather"
+    assert st_["demote_gathers"] < st_["demotions"]
+
+
+# ------------------------------------------------------ swap-in re-sharing
+def test_swap_in_reshares_twin_prefix(reduced_params_cache):
+    """Twin-swap: two identical prompts are co-resident; one is
+    swap-preempted mid-decode and swaps back while its twin still holds
+    the prefix.  The swap-in must run plan_share and commit the shared
+    blocks BY REFERENCE (swap_in_shared_blocks > 0), dropping pool
+    occupancy versus the sharing-disabled run — and the outputs stay
+    token-for-token identical."""
+    cfg, params = reduced_params_cache("yi-9b")
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    rng = np.random.default_rng(83)
+    prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+
+    def serve(sharing, preempt_at=None):
+        eng = ServingEngine(cfg, params, spec,
+                            ParallelTwoChunkPolicy(MODEL, spec),
+                            max_batch=4, max_seq=256, block_size=16,
+                            preempt_policy="swap", prefix_sharing=sharing)
+        eng.submit(Request(rid=0, arrival=0.0, prompt_len=64,
+                           output_len=14), prompt)
+        eng.submit(Request(rid=1, arrival=0.001, prompt_len=64,
+                           output_len=14), prompt.copy())
+        if preempt_at is not None:
+            eng.preempt(1, at=preempt_at)
+        return eng, eng.serve()
+
+    calm, outs_calm = serve(True)
+    tt = calm.reqs[1].token_times
+    mid = 0.5 * (tt[3] + tt[4])            # squarely inside rid 1's decode
+    eng, outs = serve(True, preempt_at=mid)
+    st_ = eng.swap_stats
+    assert st_["swap_outs"] >= 1 and st_["swap_ins"] >= 1
+    assert st_["swap_in_shared_blocks"] >= 4, \
+        "the twin's 4 full prompt blocks must be committed by reference"
+    # pool occupancy drops: the sharing-disabled twin-swap run commits a
+    # full fresh copy at swap-in (and at admission), the sharing run never
+    # holds the prefix twice
+    unshared, outs_u = serve(False, preempt_at=mid)
+    bm_s, bm_u = eng.dstates[0].blocks, unshared.dstates[0].blocks
+    assert bm_s.peak_in_use < bm_u.peak_in_use, \
+        "twin swap round trip must not duplicate the resident prefix"
+    assert bm_s.stats["fresh"] < bm_u.stats["fresh"]
+    for rid in outs_calm:
+        assert outs[rid] == outs_calm[rid] == outs_u[rid], \
+            f"rid {rid} diverged across the swap round trip"
+    _assert_swap_drained(eng)
+
+
 def test_engine_rejects_bad_offload_config(reduced_params_cache):
     cfg, params = reduced_params_cache("yi-9b")
     spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))

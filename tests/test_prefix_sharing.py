@@ -217,29 +217,58 @@ def test_prefill_pool_backpressure_completes_and_matches(
     _assert_drained(eng)
 
 
-# --------------------------------------------------- actionable config error
-def test_paged_decode_kv_split_error_is_actionable(reduced_params_cache):
-    """The paged-decode + kv_split_axis combination must fail with a
-    message naming the config knobs involved (ExecContext.kv_split_axis,
-    the dense-cache escape hatch) rather than a bare NotImplementedError."""
-    import jax
+# ------------------------------------------------- sharded (striped) layout
+def _stripe_pool(rng, n, k, v, page):
+    """jnp view of the shared striped-pool builder (tests/stripe_util)."""
+    from stripe_util import stripe_pool
+    kp, vp, tables = stripe_pool(rng, n, k, v, page)
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tables)
 
-    from repro.models.attention import attention_block
-    from repro.models.sharding import ExecContext
-    cfg, params = reduced_params_cache("yi-9b")
-    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("kv",))
-    ctx = ExecContext(mesh=mesh, kv_split_axis="kv")
-    p = jax.tree.map(lambda a: a[0], params["blocks"]["0"])
-    x = jnp.zeros((1, 1, cfg.d_model), jnp.dtype(cfg.dtype))
-    cache = {"k": None, "v": None,
-             "block_table": jnp.zeros((1, 1), jnp.int32)}
-    with pytest.raises(NotImplementedError) as ei:
-        attention_block(x, p, cfg, ctx, jnp.zeros((1, 1), jnp.int32),
-                        "decode", cache=cache,
-                        cache_len=jnp.zeros((1,), jnp.int32))
-    msg = str(ei.value)
-    assert "kv_split_axis" in msg and "'kv'" in msg
-    assert "dense" in msg and "block_table" in msg
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_paged_layout_matches_unsharded_oracle(n_shards):
+    """The striped sharded pool layout (kv_shards > 1) must be
+    numerically transparent: ops.paged_decode_attention and
+    ops.paged_prefill_attention on the (n, bps+1, page, ...) pools +
+    (n, B, npg_local) local tables match the dense decode/prefill oracles
+    exactly as the unsharded layout does.  (The multi-device shard_map
+    islands over this layout are validated in tests/dist_progs/.)"""
+    from repro.kernels import ops
+    from repro.kernels.ref import (attention_ref, decode_attention_ref,
+                                   sharded_pool_view)
+    rng = np.random.default_rng(5)
+    B, H, KVH, D, page, npg = 2, 4, 2, 16, 8, 6
+    S = page * npg
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    kp, vp, bt = _stripe_pool(rng, n_shards, k, v, page)
+    np.testing.assert_array_equal(np.asarray(sharded_pool_view(kp, bt)),
+                                  np.asarray(k))
+    lengths = jnp.asarray([19, 42], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    for window in (None, 8):
+        got = ops.paged_decode_attention(q, kp, vp, bt, lengths,
+                                         window=window, impl="ref")
+        want = decode_attention_ref(q, k, v, lengths, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+    # prefill against sharded history
+    Sq = 8
+    qc = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, Sq, KVH, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Sq, KVH, D)), jnp.float32)
+    pos = jnp.stack([jnp.arange(l, l + Sq, dtype=jnp.int32)
+                     for l in lengths])
+    got = ops.paged_prefill_attention(qc, kc, vc, pos, pos, kp, vp, bt,
+                                      lengths, impl="ref")
+    hpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    want = attention_ref(
+        qc, jnp.concatenate([k, kc], 1), jnp.concatenate([v, vc], 1),
+        pos, jnp.concatenate([hpos, pos], 1), causal=True,
+        kv_valid=jnp.concatenate(
+            [hpos < lengths[:, None], jnp.ones((B, Sq), bool)], 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
 
 
 # ------------------------------------------------------- paged prefill kernel
