@@ -15,12 +15,18 @@ on/off) and reports the prefix-hit rate, peak blocks in use and output
 equality; a fourth squeezes the tight-pool trace through BOTH preemption
 policies (swap-to-host vs recompute) and reports recomputed prefill
 tokens, TTFT/worst-TBT deltas, PCIe swap bytes and host-prefix-cache
-hits; a fifth micro-benchmarks the donated page-scatter helpers (the
-per-tick pool-update cost that ``donate_argnums`` keeps from
+hits; a fifth compares a live elastic restripe of the sharded pools
+(SP width resize mid-decode, pages migrating cross-shard) against the
+drain-based alternative (preempt every resident, resize, re-prefill) —
+both token-identical, but drain stalls decode ticks where restripe
+stalls none (needs >= 2 host devices; skipped with a sentinel row
+otherwise); a sixth micro-benchmarks the donated page-scatter helpers
+(the per-tick pool-update cost that ``donate_argnums`` keeps from
 functionally rebuilding the pool arrays).
 
-CI runs this via ``run.py --quick --only engine_fidelity --json ...`` and
-uploads the JSON so the BENCH_* trajectory accumulates per commit.
+CI runs this via ``run.py --quick --only engine_fidelity --json`` and
+uploads the stable-schema ``BENCH_engine.json`` it writes at the repo
+root, so the BENCH_* trajectory accumulates per commit.
 """
 
 import time
@@ -186,6 +192,81 @@ def run(quick: bool = False):
           f"host prefix hits {sw_st['host_prefix_hits']} | outputs match "
           f"roomy run: swap={sw_match} recompute={rec_match}")
 
+    # --- elastic restripe vs drain: resizing the live SP stripe width.
+    # The drain-free path migrates only the pages whose owning shard
+    # changes (one all-to-all per pool) while decode keeps ticking; the
+    # drain alternative preempts every resident at the resize point and
+    # re-prefills them.  Both are token-identical to the undisturbed
+    # run — the difference is stalled decode ticks (drain >> 0,
+    # restripe == 0).  Needs >= 2 host devices (CI forces 4 via
+    # XLA_FLAGS); emits a sentinel row on single-device hosts so the
+    # JSON schema stays stable.
+    n_dev = min(4, jax.device_count())
+    if n_dev >= 2:
+        from repro.models.sharding import ExecContext
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]), ("x",))
+        sctx = ExecContext(mesh=mesh, sp_axis="x", kv_split_axis="x")
+        narrow, wide = n_dev // 2, n_dev
+        rs_rng = np.random.default_rng(11)
+        # equal SP-divisible prompt lengths + simultaneous arrivals: the
+        # mesh prefill path shards the chunk sequence over sp_axis, so
+        # the drain baseline's recompute re-prefills must stay divisible
+        # by n_dev.  Equal arrivals keep all residents on the same tick
+        # schedule; the preempt flag set between the 3rd and 4th decode
+        # tick evicts everyone at the 4th with 5 tokens out, so every
+        # resume sequence is 64 + 4 = 68 = 0 (mod 4).  The host KV tier
+        # is off so the drained requests pay the full re-prefill — the
+        # cost a drain-style resize intrinsically adds and the second
+        # tier would partly mask
+        rs_prompts = [rs_rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+                      for _ in range(3)]
+
+        def serve_elastic(restripes=(), drain_at=None):
+            s = ClusterSpec(n_prefill=16, n_decode=1,
+                            sp_candidates=(1, 2, 4))
+            e = ServingEngine(cfg, params, s,
+                              _ParallelPolicy(table1_model(), s), ctx=sctx,
+                              max_batch=4, max_seq=256, block_size=16,
+                              preempt_policy="recompute",
+                              host_pool_blocks=0)
+            for i, p in enumerate(rs_prompts):
+                e.submit(Request(rid=i, arrival=0.0,
+                                 prompt_len=len(p), output_len=8), p)
+            for nn, at in restripes:
+                e.request_restripe(nn, at=at)
+            if drain_at is not None:
+                # drain rids 1..n at the resize point; rid 0 keeps the
+                # decode tick clock alive so the stall metric counts the
+                # ticks the drained requests miss while re-prefilling
+                for i in range(1, len(rs_prompts)):
+                    e.preempt(i, at=drain_at)
+            t0 = time.perf_counter()
+            out = e.serve()
+            return e, out, time.perf_counter() - t0
+
+        base_e, base_out, _ = serve_elastic([(narrow, None)])
+        tt = base_e.reqs[0].token_times
+        t_mid = 0.5 * (tt[2] + tt[3])      # mid-decode resize point
+        el, el_out, el_wall = serve_elastic([(narrow, None), (wide, t_mid)])
+        dr, dr_out, _ = serve_elastic([(narrow, None), (wide, t_mid)],
+                                      drain_at=t_mid)
+        mig = sum(ev["migrated_blocks"] for ev in el.restripe_log)
+        rs_ok = bool(el_out == base_out == dr_out
+                     and not el.preempt_log and dr.preempt_log)
+        rs_toks = sum(len(t) for t in el_out.values())
+        print(f"restripe vs drain ({narrow}->{wide} mid-decode): stalled "
+              f"ticks {el.stall_ticks} vs {dr.stall_ticks} | migrated "
+              f"pages {mig} | preemptions {len(el.preempt_log)} vs "
+              f"{len(dr.preempt_log)} | token-identical: {rs_ok}")
+        restripe_row = fmt_row(
+            "engine.restripe_vs_drain", el_wall * 1e6 / max(rs_toks, 1),
+            f"stall={el.stall_ticks}/{dr.stall_ticks}|migrated={mig}"
+            f"|match={int(rs_ok)}")
+    else:
+        print("restripe vs drain: skipped (single-device host)")
+        restripe_row = fmt_row("engine.restripe_vs_drain", 0.0,
+                               "stall=na|migrated=na|match=na")
+
     # --- donated page-write micro-benchmark: per-tick pool update cost.
     # scatter_kv_token/scatter_kv_chunk/copy_kv_blocks donate their pool
     # argument, so XLA aliases the buffer in place instead of rebuilding
@@ -228,6 +309,7 @@ def run(quick: bool = False):
                 f"|pcie_mib={(sw_st['bytes_out'] + sw_st['bytes_in']) / 2**20:.1f}"
                 f"|hosthits={sw_st['host_prefix_hits']}"
                 f"|match={int(sw_match and rec_match)}"),
+        restripe_row,
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
     ]
 

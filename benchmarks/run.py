@@ -28,10 +28,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", default=None,
-                    help="also write the collected rows to this path as "
-                         "JSON [{name, us_per_call, derived}, ...] — used "
-                         "by CI to upload the BENCH_* trajectory artifact")
+    ap.add_argument("--json", nargs="?", default=None,
+                    const=os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_engine.json"),
+                    help="also write the collected rows as stable-schema "
+                         "JSON {schema, quick, rows: [{name, us_per_call, "
+                         "derived}]} — bare --json writes BENCH_engine.json "
+                         "at the repo root (the CI artifact); an explicit "
+                         "path overrides")
     args, _ = ap.parse_known_args()
     mods = [m for m in MODULES if args.only is None or args.only in m]
     rows, failures = [], []
@@ -53,9 +57,14 @@ def main() -> None:
             name, us, derived = r.split(",", 2)
             recs.append({"name": name, "us_per_call": float(us),
                          "derived": derived})
-        with open(args.json, "w") as f:
-            json.dump(recs, f, indent=2)
-        print(f"wrote {len(recs)} rows to {args.json}")
+        # stable schema: bump "schema" on any breaking change so the
+        # per-commit BENCH_* artifact trajectory stays machine-readable
+        payload = {"schema": "bench-engine/v1", "quick": bool(args.quick),
+                   "rows": recs}
+        path = os.path.abspath(args.json)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(recs)} rows to {path}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -111,6 +111,7 @@ def aux_history_from_caches(cfg: ModelConfig, prev_aux: Optional[dict],
 
 def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
                        hist_len, aux_history: Optional[dict] = None,
+                       active_shards: Optional[int] = None,
                        ) -> Optional[dict]:
     """Build a ``forward(history=...)`` tree whose attention entries read
     the cross-chunk KV straight out of PagedKVCache pools.
@@ -129,7 +130,11 @@ def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
     are detected from the leaf rank: the global striped block ids are
     converted to the per-shard local tables (nb, n_shards, B, npg_local)
     that the ring-paged prefill island consumes
-    (core/ring_attention.ring_paged_prefill).
+    (core/ring_attention.ring_paged_prefill).  ``active_shards`` narrows
+    the stripe when the pool has been elastically restriped: the local
+    tables keep one row per PHYSICAL shard (the island shards that axis)
+    but column j of row s then means logical page ``j * active_shards +
+    s``, and rows past the active stripe are all-scratch.
     """
     out: dict = {}
     bt_b = ln_b = None
@@ -145,11 +150,12 @@ def pages_history_view(cfg: ModelConfig, pools: dict, block_table,
                     from repro.serving.cache_manager import shard_block_table
                     import numpy as np
                     n_sh, bps = leaf.shape[1], leaf.shape[2] - 1
+                    act = min(active_shards or n_sh, n_sh)
                     bt_np = np.asarray(block_table, np.int32)
                     if bt_np.ndim == 1:
                         bt_np = bt_np[None]               # (B=1, npg)
                     bt = jnp.asarray(
-                        shard_block_table(bt_np, n_sh, bps))
+                        shard_block_table(bt_np, act, bps, n_slots=n_sh))
                     B_ = bt.shape[1]
                 else:
                     bt = jnp.asarray(block_table, jnp.int32)
@@ -190,7 +196,8 @@ def prefill_chunk_paged(params: dict, cfg: ModelConfig, ctx: ExecContext,
     history = None
     if hist_len > 0 or aux_history is not None:
         history = pages_history_view(cfg, pools, block_table, hist_len,
-                                     aux_history)
+                                     aux_history,
+                                     active_shards=ctx.active_pool_shards)
     logits, _, new_caches = forward(
         params, cfg, ctx, tokens, positions, "prefill",
         history=history, encoder_frames=encoder_frames)

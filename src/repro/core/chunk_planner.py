@@ -154,10 +154,11 @@ class CDSPScheduler:
     def single_chunk_schedule(self, L: int, alloc: Allocation,
                               sp_sizes: Sequence[int],
                               pool: Dict[int, float],
-                              improvement_rate: Optional[float] = None
+                              improvement_rate: Optional[float] = None,
+                              cached_tokens: int = 0
                               ) -> Optional[Tuple[int, ...]]:
         rate = self.improvement_rate if improvement_rate is None else improvement_rate
-        C = alloc.total_length
+        C = alloc.total_length + cached_tokens
         initial = alloc.instances
         opt_ttft, opt_group = float("inf"), None
         for s in sorted(sp_sizes):
@@ -176,9 +177,9 @@ class CDSPScheduler:
 
     # --------------------------------------------------------- Algorithm 3
     def get_chunk_plan(self, L: int, alloc: Allocation, s_cur: int,
-                       s_next: int, pool: Dict[int, float]
-                       ) -> Optional[Chunk]:
-        C = alloc.total_length
+                       s_next: int, pool: Dict[int, float],
+                       cached_tokens: int = 0) -> Optional[Chunk]:
+        C = alloc.total_length + cached_tokens
         initial = alloc.instances
         cur_group = self.get_group(pool, initial, s_cur)
         if cur_group is None:
@@ -200,17 +201,23 @@ class CDSPScheduler:
                  alloc: Optional[Allocation] = None,
                  sp_sizes: Optional[Sequence[int]] = None,
                  improvement_rate: Optional[float] = None,
+                 cached_tokens: int = 0,
                  _depth: int = 0) -> Optional[Allocation]:
-        """Returns the optimal CDSP allocation for a request of L tokens."""
+        """Returns the optimal CDSP allocation for a request of L tokens.
+
+        ``cached_tokens`` is prompt-prefix context whose KV already exists
+        (host prefix cache promotion): no chunk is planned for it, but
+        every chunk's Eq. (1) latency attends over it as history, so the
+        plan prices the real mid-prompt start."""
         alloc = alloc or Allocation()
         sp_sizes = tuple(sp_sizes or self.sp_candidates)
 
         # Step 0: initial single-chunk plan
         group = self.single_chunk_schedule(L, alloc, sp_sizes, pool,
-                                           improvement_rate)
+                                           improvement_rate, cached_tokens)
         if group is None:
             return None
-        C = alloc.total_length
+        C = alloc.total_length + cached_tokens
         t_q = max((pool[i] for i in group), default=0.0)
         t_p = self.model.latency(len(group), C, L)
         opt = Allocation(alloc.chunks + [Chunk(L, group, t_q, t_q + t_p)])
@@ -220,7 +227,8 @@ class CDSPScheduler:
         if len(s_cdsp) <= 1 or _depth > 8:
             return opt
         for s_cur, s_next in itertools.combinations(sorted(s_cdsp), 2):
-            plan = self.get_chunk_plan(L, alloc, s_cur, s_next, pool)
+            plan = self.get_chunk_plan(L, alloc, s_cur, s_next, pool,
+                                       cached_tokens)
             if plan is None:
                 continue
             offset = plan.t_end
@@ -228,7 +236,8 @@ class CDSPScheduler:
             alloc2 = Allocation(alloc.chunks + [plan])
             s2 = [s for s in s_cdsp if s >= s_next]
             sub = self.schedule(L - plan.length, pool2, alloc2, s2,
-                                improvement_rate, _depth=_depth + 1)
+                                improvement_rate, cached_tokens,
+                                _depth=_depth + 1)
             if sub is None:
                 continue
             # shift the recursion's relative times back to absolute

@@ -90,6 +90,24 @@ class DynamicRateController:
             return 0.0
         return sum(b for _, b in self._queue_obs) / len(self._queue_obs)
 
+    def sp_decision(self, now: float, candidates: Sequence[int],
+                    current: int) -> int:
+        """Target live stripe width for the elastically restriped paged
+        pools (serving/engine.py ``request_restripe``), one candidate step
+        at a time.  Sustained queue backlog (> 1.5 s mean over the window)
+        steps DOWN — wide sequence parallelism is a latency optimisation
+        whose per-chunk communication is wasted under congestion — and a
+        near-empty window (< 0.5 s) steps back UP for latency.  One step
+        per decision keeps each resize's page-migration volume small."""
+        cands = sorted({int(c) for c in candidates if c >= 1} | {current})
+        i = cands.index(current)
+        p = self.queue_pressure(now)
+        if p > 1.5 and i > 0:
+            return cands[i - 1]
+        if p < 0.5 and i + 1 < len(cands):
+            return cands[i + 1]
+        return current
+
     def rate(self, now: float) -> float:
         base = self._table_rate(now)
         if self.queue_gain > 0.0:

@@ -371,7 +371,8 @@ def _local_page_slab(k_loc, v_loc, bt_loc, lengths, n, idx):
 def sharded_paged_decode_local(q, k_loc, v_loc, bt_loc, lengths, *,
                                axis_name, window: Optional[int] = None,
                                softmax_scale=None, impl: Optional[str] = None,
-                               k_new=None, v_new=None):
+                               k_new=None, v_new=None,
+                               active_shards: Optional[int] = None):
     """Per-shard body of the split-KV *paged* decode (call inside
     shard_map).
 
@@ -393,9 +394,17 @@ def sharded_paged_decode_local(q, k_loc, v_loc, bt_loc, lengths, *,
     A sliding ``window`` cannot be expressed as a local length for a
     strided shard, so that path gathers the shard's pages into a local
     positional view and masks by positions instead.
+
+    ``active_shards`` (default: the full axis) is the live stripe width
+    of an elastically restriped pool — logical page i is on shard ``i %
+    active_shards``.  Shards at index >= active_shards hold no pages:
+    their local length masks to zero, so their partial merges with
+    weight zero (lse = NEG_INF) and the append predicate is uniformly
+    false.
     """
-    n = lax.psum(1, axis_name)
+    n = lax.psum(1, axis_name) if active_shards is None else active_shards
     idx = lax.axis_index(axis_name)
+    lengths = jnp.where(idx < n, lengths, 0)
     B, npg = bt_loc.shape
     page = k_loc.shape[1]
     scratch = k_loc.shape[0] - 1
@@ -439,7 +448,8 @@ def sharded_paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
                          mesh, split_axis: str, batch_axis=None,
                          window: Optional[int] = None, softmax_scale=None,
                          impl: Optional[str] = None,
-                         k_new=None, v_new=None):
+                         k_new=None, v_new=None,
+                         active_shards: Optional[int] = None):
     """Split-KV decode over a sequence-parallel *sharded paged* pool.
 
     q: (B, H, D); k_pool/v_pool: (n, blocks_per_shard + 1, page, KVH, D)
@@ -450,10 +460,14 @@ def sharded_paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
     happens inside the island on the owning shard, so pages never leave
     their device.  Returns (o, k_pool, v_pool).  This is the paged twin of
     ``split_kv_decode``: per-shard partial softmax over device-local pages
-    + LSE merge across the axis.
+    + LSE merge across the axis.  ``active_shards`` narrows the stripe to
+    the first so-many shards of the axis (elastic restriping) — the
+    block_tables rows past it must be all-scratch
+    (cache_manager.shard_block_table with ``n_slots``).
     """
     body = partial(sharded_paged_decode_local, axis_name=split_axis,
-                   window=window, softmax_scale=softmax_scale, impl=impl)
+                   window=window, softmax_scale=softmax_scale, impl=impl,
+                   active_shards=active_shards)
     pool_spec = P(split_axis, None, None, None)
     bt_spec = P(split_axis, batch_axis, None)
     rep3 = P(batch_axis, None, None)
@@ -487,7 +501,8 @@ def ring_paged_prefill_local(q, k, v, q_pos, kv_pos, k_pool_loc, v_pool_loc,
                              causal: bool = True,
                              window: Optional[int] = None,
                              softmax_scale=None, impl: Optional[str] = None,
-                             head_shard_axis: Optional[str] = None):
+                             head_shard_axis: Optional[str] = None,
+                             active_shards: Optional[int] = None):
     """Per-shard body of CDSP chunk prefill against *sharded paged*
     history (call inside shard_map).
 
@@ -527,8 +542,14 @@ def ring_paged_prefill_local(q, k, v, q_pos, kv_pos, k_pool_loc, v_pool_loc,
     n = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     perm = [(j, (j + 1) % n) for j in range(n)]
+    # the ring always rotates over the FULL axis (the chunk's own KV is
+    # sharded over every device) — only the history stripe narrows when
+    # the pool is running on fewer active shards; idle shards contribute
+    # an empty (fully masked) history slab
+    n_hist = n if active_shards is None else active_shards
+    hl = jnp.where(idx < n_hist, hist_len, 0)
     hk, hv, hpos = _local_page_slab(k_pool_loc, v_pool_loc, bt_loc,
-                                    hist_len, n, idx)
+                                    hl, n_hist, idx)
 
     o = jnp.zeros(q.shape, jnp.float32)
     lse = jnp.full((q.shape[0], q.shape[2], q.shape[1]), NEG_INF, jnp.float32)
@@ -558,7 +579,8 @@ def ring_paged_prefill(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables,
                        head_axis: Optional[str] = None,
                        batch_axis=None, causal: bool = True,
                        window: Optional[int] = None, softmax_scale=None,
-                       impl: Optional[str] = None):
+                       impl: Optional[str] = None,
+                       active_shards: Optional[int] = None):
     """Global-view ring attention for a CDSP chunk whose cross-chunk
     history lives in a sequence-parallel sharded page pool.
 
@@ -578,7 +600,8 @@ def ring_paged_prefill(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables,
     bt_spec = P(sp_axis, None, None)
     body = partial(ring_paged_prefill_local, axis_name=sp_axis,
                    causal=causal, window=window, softmax_scale=softmax_scale,
-                   impl=impl, head_shard_axis=head_axis)
+                   impl=impl, head_shard_axis=head_axis,
+                   active_shards=active_shards)
 
     def f(q, k, v, qp, kvp, kp, vp, bt, ln):
         o, _ = body(q, k, v, qp, kvp, kp[0], vp[0], bt[0], ln)

@@ -308,18 +308,19 @@ def _sharded_page_ops(mesh, axis: str):
     pool_spec = P(None, axis)                 # (nb, n, bps+1, page, KVH, D)
     ids_spec = P(axis,)                       # leading shard axis
 
-    def _scatter_chunk(pool, local_pages, seq_kv, positions):
+    def _scatter_chunk(pool, local_pages, seq_kv, positions, n_act):
         # pool: (nb, 1, bps+1, page, KVH, D); local_pages: (1, npg_loc);
-        # seq_kv: (nb, L, KVH, D) replicated; positions: (L,) replicated
+        # seq_kv: (nb, L, KVH, D) replicated; positions: (L,) replicated;
+        # n_act: replicated scalar — the ACTIVE stripe width (<= mesh
+        # axis size; traced so stripe resizes never recompile)
         pl_, lp = pool[:, 0], local_pages[0]
-        n = lax.psum(1, axis)
         idx = lax.axis_index(axis)
         page = pl_.shape[2]
         scratch = pl_.shape[1] - 1
         pos = positions.astype(jnp.int32)
         pg = pos // page
-        own = (pg % n) == idx
-        phys = jnp.where(own, lp[pg // n], scratch)
+        own = (pg % n_act) == idx     # idle shards (idx >= n_act): never
+        phys = jnp.where(own, lp[pg // n_act], scratch)
         # non-owned tokens land on the scratch page (garbage, never read)
         return pl_.at[:, phys, pos % page].set(
             seq_kv.astype(pl_.dtype))[:, None]
@@ -342,6 +343,24 @@ def _sharded_page_ops(mesh, axis: str):
         pl_ = pool[:, 0]
         return pl_.at[:, dst_local[0]].set(pl_[:, src_local[0]])[:, None]
 
+    def _restripe_blocks(pool, send_local, recv_local):
+        # pool: (nb, 1, bps+1, page, KVH, D); send_local/recv_local:
+        # (1, N, m) after sharding the (N, N, m) grids on their leading
+        # axis — send_local[s, d] = local ids shard s sends to shard d,
+        # recv_local[d, s] = destination local ids on d for shard s's
+        # payload, aligned slot-for-slot.  Scratch-padded slots move the
+        # scratch page onto the scratch page: harmless, uniform SPMD.
+        pl_ = pool[:, 0]
+        snd, rcv = send_local[0], recv_local[0]           # (N, m)
+        nb = pl_.shape[0]
+        N, m = snd.shape
+        x = pl_[:, snd.reshape(-1)].reshape((nb, N, m) + pl_.shape[2:])
+        # all_to_all: y[:, s, t] on shard d is the page shard s addressed
+        # to d at slot t — exactly what rcv[s, t] names a home for
+        y = lax.all_to_all(x, axis, split_axis=1, concat_axis=1)
+        return pl_.at[:, rcv.reshape(-1)].set(
+            y.reshape((nb, N * m) + pl_.shape[2:]))[:, None]
+
     def sm(f, in_specs, out_specs, donate=None):
         g = shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_vma=False)
@@ -351,7 +370,10 @@ def _sharded_page_ops(mesh, axis: str):
     rep = P()
     return {
         "scatter_chunk": sm(
-            _scatter_chunk, (pool_spec, ids_spec, rep, rep), pool_spec,
+            _scatter_chunk, (pool_spec, ids_spec, rep, rep, rep),
+            pool_spec, donate=(0,)),
+        "restripe_blocks": sm(
+            _restripe_blocks, (pool_spec, ids_spec, ids_spec), pool_spec,
             donate=(0,)),
         "copy_blocks": sm(
             _copy_blocks, (pool_spec, pool_spec, ids_spec, ids_spec),
@@ -368,13 +390,30 @@ def _sharded_page_ops(mesh, axis: str):
 
 
 def shard_scatter_kv_chunk(pool, local_pages, seq_kv, positions, *,
-                           mesh, axis: str):
+                           mesh, axis: str, active: Optional[int] = None):
     """Sharded ``scatter_kv_chunk``: the chunk's tokens are visible on
     every shard (replicated in-spec); each shard writes only the tokens
-    whose logical page it owns (page ``p`` belongs to shard ``p % n``),
-    routing the rest to its scratch page.  The pool argument is donated."""
+    whose logical page it owns (page ``p`` belongs to shard ``p %
+    active``), routing the rest to its scratch page.  ``active`` (default
+    all shards) is the live stripe width — shards past it idle.  The pool
+    argument is donated."""
+    n_act = jnp.int32(active or mesh.shape[axis])
     return _sharded_page_ops(mesh, axis)["scatter_chunk"](
-        pool, local_pages, seq_kv, positions)
+        pool, local_pages, seq_kv, positions, n_act)
+
+
+def shard_restripe_kv_blocks(pool, send_local, recv_local, *, mesh,
+                             axis: str):
+    """Cross-shard page migration for a live stripe resize — the ONE
+    operation that moves pages between shards.  ``send_local`` is an
+    (N, N, m) grid: row s holds, per destination d, the local page ids
+    shard s must send to d (scratch-padded to m); ``recv_local[d, s]``
+    the destination local ids on d for shard s's payload, slot-aligned
+    with ``send_local[s, d]``.  One ``all_to_all`` exchanges every
+    payload; each shard then scatters what it received.  The pool
+    argument is donated."""
+    return _sharded_page_ops(mesh, axis)["restripe_blocks"](
+        pool, send_local, recv_local)
 
 
 def shard_copy_kv_blocks(dst_pool, src_pool, src_local, dst_local, *,

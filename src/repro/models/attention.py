@@ -115,7 +115,8 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
                 qd, cache["k"], cache["v"], cache["block_table"], cache_len,
                 mesh=ctx.mesh, split_axis=ctx.kv_split_axis,
                 batch_axis=ctx.batch_axes, window=window,
-                impl=ctx.impl, k_new=k[:, 0], v_new=v[:, 0])
+                impl=ctx.impl, k_new=k[:, 0], v_new=v[:, 0],
+                active_shards=ctx.active_pool_shards)
             out = out_proj(o[:, None], p, prefix)
             return out, {"k": k_pool, "v": v_pool,
                          "block_table": cache["block_table"]}
@@ -267,14 +268,20 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
                 history["v_pool"], history["block_table"], history["len"],
                 mesh=ctx.mesh, sp_axis=ctx.sp_axis, head_axis=h_ax,
                 batch_axis=ctx.pod_axis, causal=causal,
-                window=window, impl=ctx.impl)
+                window=window, impl=ctx.impl,
+                active_shards=ctx.active_pool_shards)
         else:
             # single-group chunk, or a chunk length that does not divide
             # over the ring: the gather fallback handles both pool
-            # layouts (sharded reads go through the logical-order view)
+            # layouts (sharded reads go through the logical-order view —
+            # which stripes over exactly the table's leading rows, so an
+            # elastically narrowed pool hands over only its active rows)
+            bt = history["block_table"]
+            if bt.ndim == 3 and ctx.active_pool_shards:
+                bt = bt[:min(ctx.active_pool_shards, bt.shape[0])]
             o = ops.paged_prefill_attention(
                 q, k, v, pos2d, pos2d, history["k_pool"], history["v_pool"],
-                history["block_table"], history["len"], causal=causal,
+                bt, history["len"], causal=causal,
                 window=window, impl=ctx.impl)
         out = out_proj(o, p, prefix)
         return out, ({"k": k_self, "v": v_self} if mode == "prefill"

@@ -50,6 +50,12 @@ class ExecContext:
     # expert parallelism: experts sharded over the data axis, tokens
     # all_to_all'd to their experts (requires n_experts % axis size == 0)
     moe_ep: bool = False
+    # live stripe width of an elastically restriped paged pool: the pool
+    # keeps its physical pool_shards(...) layout but pages stripe over
+    # only the first so-many shards (None = all of them).  Set per
+    # forward call by the serving engine after a restripe
+    # (serving/engine.py request_restripe)
+    active_pool_shards: Optional[int] = None
 
     def moe_ep_axis(self) -> Optional[str]:
         if not self.moe_ep or self.mesh is None:
@@ -99,8 +105,18 @@ class ExecContext:
         return ax
 
     def pool_shards(self, role: str) -> int:
-        """Shard count for a paged pool of the given role (1 = unsharded)."""
+        """PHYSICAL shard count for a paged pool of the given role
+        (1 = unsharded).  Immutable for a pool's lifetime — elastic
+        restriping narrows ``active_shards(role)``, never this."""
         return self.axis_size(self.pool_axis(role))
+
+    def active_shards(self, role: str) -> int:
+        """Live stripe width for a paged pool of the given role: how many
+        of its physical shards pages currently stripe over."""
+        n = self.pool_shards(role)
+        if self.active_pool_shards is None:
+            return n
+        return min(n, self.active_pool_shards)
 
     def with_(self, **kw) -> "ExecContext":
         return replace(self, **kw)

@@ -6,8 +6,10 @@ sequence-parallel shard_map path when ctx.sp_axis is set (prefill/train with
 a contiguously sharded sequence) and to the Pallas/jnp chunked kernel
 otherwise.  Decode keeps a (conv window, SSD state) cache per layer.
 
-The causal conv is written as ``lax.conv_general_dilated`` so GSPMD inserts
-halo exchanges when the sequence dim is sharded.
+The causal conv runs as K shifted multiply-adds (repro/compat.py) so the
+sharded sequence dim partitions through plain pad/slice halos — the
+``conv_general_dilated`` spelling hits a depthwise-conv GSPMD bug on
+jax 0.4.x that silently drops cross-shard taps.
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import causal_depthwise_conv
 from repro.core.ring_attention import sp_ssd
 from repro.kernels import ops
 from repro.models.config import ModelConfig
@@ -30,16 +33,9 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
     ``init``: (B, K-1, ch) carry-in from a previous CDSP chunk (or decode
     window); default zeros (sequence start)."""
-    B, S, ch = x.shape
-    K = w.shape[0]
-    if init is None:
-        init = jnp.zeros((B, K - 1, ch), x.dtype)
-    xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)
-    out = jax.lax.conv_general_dilated(
-        xp, w[:, None, :].astype(x.dtype),
-        window_strides=(1,), padding="VALID",
-        dimension_numbers=("NWC", "WIO", "NWC"),
-        feature_group_count=ch)
+    out = causal_depthwise_conv(
+        x, w.astype(x.dtype),
+        None if init is None else init.astype(x.dtype))
     return out + b.astype(x.dtype)
 
 

@@ -55,12 +55,25 @@ kv_shards``), so split-KV decode attends each shard's page subset with a
 contiguously-valid local view and merges partial softmaxes by LSE
 (core/ring_attention.sharded_paged_decode), and ring-attention prefill
 rotates each shard's history pages around the ring
-(core/ring_attention.ring_paged_prefill).  Pages never migrate between
-shards: chunk scatters, admission copies, CoW splits and host staging all
-run as shard_map bodies that keep every page device-local
-(kernels/flash_decode.py sharded helpers).  Each shard carries its own
-scratch page (local id ``blocks_per_shard``); the global scratch id stays
-``total_blocks``.
+(core/ring_attention.ring_paged_prefill).  In steady state pages never
+migrate between shards: chunk scatters, admission copies, CoW splits and
+host staging all run as shard_map bodies that keep every page
+device-local (kernels/flash_decode.py sharded helpers).  Each shard
+carries its own scratch page (local id ``blocks_per_shard``); the global
+scratch id stays ``total_blocks``.
+
+**Elastic striping** (``active_shards <= kv_shards``): the physical pool
+layout is immutable, but the *stripe* — how many shards new pages spread
+over — can shrink and grow at runtime.  ``BlockManager.restripe(n)``
+remaps exactly the live pages whose owning shard changes under the new
+stripe invariant (``i % n``) and returns the (old, new) global-id pairs;
+``PagedKVCache.restripe`` then moves those pages between devices in one
+``all_to_all`` collective per layer (the ONLY time pages cross shards).
+Shards at index >= active_shards idle: their free blocks are never
+taken, and the attention islands mask them to zero-length so their LSE
+contributions vanish.  This is what lets the engine resize sequence
+parallelism under live residents without draining (see
+serving/engine.py ``request_restripe``).
 """
 
 from __future__ import annotations
@@ -73,21 +86,27 @@ import numpy as np
 
 
 def shard_block_table(table: np.ndarray, kv_shards: int,
-                      blocks_per_shard: int) -> np.ndarray:
+                      blocks_per_shard: int,
+                      n_slots: Optional[int] = None) -> np.ndarray:
     """Global block table -> per-shard local tables for the sharded pool.
 
     ``table`` is (B, npg) int32 *global* block ids (striped: position j is
-    on shard ``j % kv_shards``; the global scratch ``kv_shards *
-    blocks_per_shard`` may appear anywhere as padding).  Returns
-    (kv_shards, B, ceil(npg / kv_shards)) int32 *local* page ids, where
-    row ``s`` column ``j`` holds the request's logical page ``j *
-    kv_shards + s`` (or the shard's local scratch ``blocks_per_shard``
-    when padded / past the allocation)."""
+    on shard ``j % kv_shards``; the global scratch may appear anywhere as
+    padding).  Returns (n_slots or kv_shards, B, ceil(npg / kv_shards))
+    int32 *local* page ids, where row ``s`` column ``j`` holds the
+    request's logical page ``j * kv_shards + s`` (or the shard's local
+    scratch ``blocks_per_shard`` when padded / past the allocation).
+
+    ``kv_shards`` is the *stripe* count (the pool's active shards);
+    ``n_slots`` the *physical* shard count when it differs — extra rows
+    are all-scratch so idle devices index only their scratch page, and
+    the global scratch id is ``n_slots * blocks_per_shard``."""
     table = np.asarray(table, np.int32)
     B, npg = table.shape
+    n_slots = n_slots or kv_shards
     npg_loc = -(-max(npg, 1) // kv_shards)
-    scratch = kv_shards * blocks_per_shard
-    out = np.full((kv_shards, B, npg_loc), blocks_per_shard, np.int32)
+    scratch = n_slots * blocks_per_shard
+    out = np.full((n_slots, B, npg_loc), blocks_per_shard, np.int32)
     for s in range(kv_shards):
         cols = np.arange(s, npg, kv_shards)
         g = table[:, cols]
@@ -129,11 +148,25 @@ class BlockManager:
     With ``kv_shards > 1`` the pool mirrors a sequence-parallel sharded
     ``PagedKVCache``: one free list per shard, and allocation is striped —
     the block at position i of any allocation comes from shard ``i %
-    kv_shards`` (device-major ids: ``shard_of(b) = b // blocks_per_shard``).
-    Capacity checks (``can_fit``/``extend``) are per-shard exact, and a
-    virtual reservation carries the stripe ``offset`` it will be committed
-    at (the number of shared blocks preceding the fresh take) so the
-    per-shard promise matches the eventual ``_take``.
+    active_shards`` (device-major ids: ``shard_of(b) = b //
+    blocks_per_shard``).  Capacity checks (``can_fit``/``extend``) are
+    per-shard exact, and a virtual reservation carries the stripe
+    ``offset`` it will be committed at (the number of shared blocks
+    preceding the fresh take) so the per-shard promise matches the
+    eventual ``_take``.
+
+    ``active_shards`` (<= kv_shards, initially equal) is the *stripe*
+    width: new pages spread over shards ``0 .. active_shards - 1`` only;
+    higher shards idle.  ``restripe(n)`` changes it live, remapping the
+    live pages whose owning shard changes and returning the (old, new)
+    id pairs for the physical move (``PagedKVCache.restripe``).
+
+    ``_virt_shard`` is the per-physical-shard tally of blocks promised to
+    pending virtual reservations, maintained incrementally on
+    reserve/commit/release/update/cancel (``_virtual_by_shard()`` is the
+    from-scratch recompute, kept for the property tests' equivalence
+    check and for ``restripe``, which changes every reservation's stripe
+    at once).
     """
 
     total_blocks: int
@@ -160,10 +193,12 @@ class BlockManager:
         assert self.total_blocks % self.kv_shards == 0, \
             (self.total_blocks, self.kv_shards)
         self.blocks_per_shard = self.total_blocks // self.kv_shards
+        self.active_shards = self.kv_shards
         self.shard_free: List[List[int]] = [
             list(range(s * self.blocks_per_shard,
                        (s + 1) * self.blocks_per_shard))
             for s in range(self.kv_shards)]
+        self._virt_shard: List[int] = [0] * self.kv_shards
 
     @property
     def free_blocks(self) -> List[int]:
@@ -173,20 +208,32 @@ class BlockManager:
     def shard_of(self, block: int) -> int:
         return block // self.blocks_per_shard
 
-    def _stripe_need(self, n_blocks: int, offset: int) -> List[int]:
-        """Blocks landing on each shard when taking ``n_blocks`` at stripe
-        positions ``offset .. offset + n_blocks - 1``."""
-        base, rem = divmod(n_blocks, self.kv_shards)
-        return [base + (1 if (s - offset) % self.kv_shards < rem else 0)
-                for s in range(self.kv_shards)]
+    def _stripe_need(self, n_blocks: int, offset: int,
+                     n: Optional[int] = None) -> List[int]:
+        """Blocks landing on each physical shard when taking ``n_blocks``
+        at stripe positions ``offset .. offset + n_blocks - 1`` under an
+        ``n``-wide stripe (default: the current active stripe).  Always
+        length ``kv_shards``; idle shards get 0."""
+        n = n or self.active_shards
+        base, rem = divmod(n_blocks, n)
+        return [base + (1 if (s - offset) % n < rem else 0)
+                for s in range(n)] + [0] * (self.kv_shards - n)
 
-    def _virtual_by_shard(self) -> List[int]:
+    def _virtual_by_shard(self, n: Optional[int] = None) -> List[int]:
+        """From-scratch recompute of ``_virt_shard`` (optionally under a
+        hypothetical stripe width ``n`` — the restripe feasibility check)."""
         out = [0] * self.kv_shards
         for rid, t in self.virtual_tokens.items():
             need = self._stripe_need(self.blocks_for(t),
-                                     self.virtual_offset.get(rid, 0))
+                                     self.virtual_offset.get(rid, 0), n)
             out = [a + b for a, b in zip(out, need)]
         return out
+
+    def _virt_add(self, rid: int, sign: int = 1) -> None:
+        need = self._stripe_need(self.blocks_for(self.virtual_tokens[rid]),
+                                 self.virtual_offset.get(rid, 0))
+        self._virt_shard = [a + sign * b
+                            for a, b in zip(self._virt_shard, need)]
 
     # ------------------------------------------------------------- queries
     def blocks_for(self, n_tokens: int) -> int:
@@ -203,9 +250,23 @@ class BlockManager:
         """Blocks promised to in-flight (not yet committed) requests."""
         return sum(self.blocks_for(t) for t in self.virtual_tokens.values())
 
+    def effective_free(self) -> int:
+        """Blocks a striped allocation can still actually claim: the
+        tightest shard bounds everything (stripe position -> shard is
+        fixed, so a pool with shard 0 exhausted fits *zero* fresh striped
+        blocks no matter how free the other shards are).  min over active
+        shards of (free - virtual), scaled back to global block units."""
+        n = self.active_shards
+        return n * min(len(self.shard_free[s]) - self._virt_shard[s]
+                       for s in range(n))
+
     def freeness(self, batch_size: int) -> float:
-        """Llumnix freeness rate: effective free blocks per batch slot."""
-        return (self.n_free - self.virtual_blocks) / (batch_size + 1.0)
+        """Llumnix freeness rate: effective free blocks per batch slot.
+
+        Uses ``effective_free`` — the naive ``n_free - virtual_blocks``
+        over-reports on a striped pool with skewed shards and made the
+        router admit requests that could never commit."""
+        return self.effective_free() / (batch_size + 1.0)
 
     def can_fit(self, n_tokens: int, offset: int = 0) -> bool:
         """True if ``n_tokens`` worth of fresh blocks, taken at stripe
@@ -213,9 +274,9 @@ class BlockManager:
         reservations (per-shard exact — a striped pool can exhaust one
         shard while others still have room)."""
         need = self._stripe_need(self.blocks_for(n_tokens), offset)
-        virt = self._virtual_by_shard()
+        virt = self._virt_shard
         return all(need[s] <= len(self.shard_free[s]) - virt[s]
-                   for s in range(self.kv_shards))
+                   for s in range(self.active_shards))
 
     def can_extend(self, rid: int, n_tokens: int) -> bool:
         """True if ``extend(rid, n_tokens)`` would succeed right now."""
@@ -226,8 +287,8 @@ class BlockManager:
     def can_take_at(self, stripe: int) -> bool:
         """True if one fresh block is available on the shard that stripe
         position ``stripe`` maps to (the copy-on-write fit check)."""
-        s = stripe % self.kv_shards
-        return len(self.shard_free[s]) - self._virtual_by_shard()[s] >= 1
+        s = stripe % self.active_shards
+        return len(self.shard_free[s]) - self._virt_shard[s] >= 1
 
     def grow_blocks_needed(self, rid: int, n_tokens: int) -> int:
         """Extra blocks ``rid`` needs to cover ``n_tokens`` (0 if covered)."""
@@ -237,10 +298,10 @@ class BlockManager:
     def _take(self, n: int, offset: int = 0) -> List[int]:
         """Pop ``n`` fresh blocks (refcount 1 each), striped from stripe
         position ``offset`` on: block i comes from shard (offset + i) %
-        kv_shards, preserving the position->shard invariant."""
+        active_shards, preserving the position->shard invariant."""
         blocks = []
         for i in range(n):
-            fl = self.shard_free[(offset + i) % self.kv_shards]
+            fl = self.shard_free[(offset + i) % self.active_shards]
             assert fl, "accounting violated"
             b = fl.pop()
             self.ref[b] = 1
@@ -270,7 +331,25 @@ class BlockManager:
             return False
         self.virtual_tokens[rid] = n_tokens
         self.virtual_offset[rid] = offset
+        self._virt_add(rid)
         return True
+
+    def update_virtual(self, rid: int, n_tokens: int, offset: int) -> None:
+        """Re-point an existing reservation (swap-in re-sharing found more
+        shared blocks, so fewer fresh tokens at a later stripe offset).
+        Keeps the incremental per-shard tally consistent — callers must
+        not mutate ``virtual_tokens``/``virtual_offset`` directly."""
+        self._virt_add(rid, -1)
+        self.virtual_tokens[rid] = n_tokens
+        self.virtual_offset[rid] = offset
+        self._virt_add(rid)
+
+    def cancel_virtual(self, rid: int) -> None:
+        """Drop a reservation without committing it (cancelled swap-in)."""
+        if rid in self.virtual_tokens:
+            self._virt_add(rid, -1)
+            self.virtual_tokens.pop(rid, None)
+            self.virtual_offset.pop(rid, None)
 
     def commit(self, rid: int, shared: Sequence[int] = ()) -> List[int]:
         """Virtual reservation -> physical blocks (transfer complete).
@@ -282,6 +361,7 @@ class BlockManager:
         the free lists.  The engine calls reserve_virtual and commit
         within one event, so decode-side ``extend`` can never race a
         pending reservation."""
+        self._virt_add(rid, -1)
         n = self.virtual_tokens.pop(rid)
         self.virtual_offset.pop(rid, None)
         for b in shared:
@@ -340,8 +420,7 @@ class BlockManager:
             self.demote_cb(dying)
         for b in freed:
             self.shard_free[self.shard_of(b)].append(b)
-        self.virtual_tokens.pop(rid, None)
-        self.virtual_offset.pop(rid, None)
+        self.cancel_virtual(rid)
         return freed
 
     # ------------------------------------------------- prefix sharing / CoW
@@ -407,6 +486,81 @@ class BlockManager:
         self.allocs[rid][idx] = new
         self.stats["cow"] += 1
         return b, new
+
+    # ------------------------------------------------- elastic restriping
+    def _migrations(self, new_n: int) -> List[Tuple[int, int]]:
+        """Distinct live (block, stripe position) pairs whose owning shard
+        changes under an ``new_n``-wide stripe.  A block's stripe position
+        is well defined even when prefix-shared: shared blocks form the
+        leading run of every holder's list (and CoW replaces in place),
+        so every holder sees it at the same index."""
+        seen: Dict[int, int] = {}
+        for blocks in self.allocs.values():
+            for i, b in enumerate(blocks):
+                seen[b] = i
+        n = self.active_shards
+        return sorted((b, i) for b, i in seen.items()
+                      if i % n != i % new_n)
+
+    def can_restripe(self, new_n: int) -> bool:
+        """True if ``restripe(new_n)`` can run right now: every migrating
+        page has a free destination block on its new shard, and after the
+        swap every pending virtual reservation still fits under the new
+        stripe.  When False the engine frees capacity (preempting the
+        newest resident) and retries — the drain-free protocol never
+        blocks decode while waiting."""
+        assert 1 <= new_n <= self.kv_shards, (new_n, self.kv_shards)
+        if new_n == self.active_shards:
+            return True
+        incoming = [0] * self.kv_shards
+        outgoing = [0] * self.kv_shards
+        for b, i in self._migrations(new_n):
+            incoming[i % new_n] += 1
+            outgoing[self.shard_of(b)] += 1
+        if any(incoming[s] > len(self.shard_free[s])
+               for s in range(self.kv_shards)):
+            return False
+        virt = self._virtual_by_shard(new_n)
+        return all(len(self.shard_free[s]) - incoming[s] + outgoing[s]
+                   >= virt[s] for s in range(new_n))
+
+    def restripe(self, new_n: int) -> List[Tuple[int, int]]:
+        """Change the stripe width to ``new_n`` shards, live.
+
+        Every live page whose stripe position maps to a different shard
+        under the new invariant gets a NEW global id popped from the free
+        list of its new shard (every migration is cross-shard by
+        construction: the position's old and new shards differ, and the
+        old id sat on the old shard).  All bookkeeping — allocation
+        lists, refcounts, published hashes, demotion tokens — follows the
+        id; the old ids return to their shards' free lists.  Virtual
+        reservations are re-striped wholesale (the per-shard tally is
+        recomputed under the new width).  Returns the sorted (old, new)
+        global-id pairs for ``PagedKVCache.restripe`` to move the
+        physical pages."""
+        assert self.can_restripe(new_n), (new_n, self.active_shards)
+        mig = self._migrations(new_n)
+        remap: Dict[int, int] = {}
+        for b, i in mig:
+            remap[b] = self.shard_free[i % new_n].pop()
+        for blocks in self.allocs.values():
+            for j, b in enumerate(blocks):
+                if b in remap:
+                    blocks[j] = remap[b]
+        for old, new in remap.items():
+            self.ref[new] = self.ref.pop(old)
+            h = self.hash_of.pop(old, None)
+            if h is not None:
+                self.hash_of[new] = h
+                if self.by_hash.get(h) == old:
+                    self.by_hash[h] = new
+            toks = self.tokens_of.pop(old, None)
+            if toks is not None:
+                self.tokens_of[new] = toks
+            self.shard_free[self.shard_of(old)].append(old)
+        self.active_shards = new_n
+        self._virt_shard = self._virtual_by_shard()
+        return sorted(remap.items())
 
 
 class PagedKVCache:
@@ -498,7 +652,7 @@ class PagedKVCache:
 
     # ------------------------------------------------------------- prefill
     def write_chunk(self, blocks: List[int], new_caches: dict,
-                    positions) -> None:
+                    positions, active: Optional[int] = None) -> None:
         """Scatter ONE prefill chunk's KV into the request's pages as the
         chunk completes — the prefill-direct-to-pages write path (replaces
         the old whole-request ``write_prefill``; there is no dense
@@ -518,22 +672,23 @@ class PagedKVCache:
         pos = jnp.asarray(pos2d[0], jnp.int32)               # (L,)
         if self.kv_shards > 1:
             # striped pool: local_pages[s, j] holds the local id of the
-            # allocation's logical page j * kv_shards + s; each shard's
+            # allocation's logical page j * active + s; each shard's
             # shard_map body scatters only the tokens whose page it owns
-            n = self.kv_shards
-            assert all(self._local(int(b))[0] == j % n
+            # (shards >= active see an all-scratch row)
+            act = active or self.kv_shards
+            assert all(self._local(int(b))[0] == j % act
                        for j, b in enumerate(blocks)), "stripe drift"
             lp = jnp.asarray(shard_block_table(
-                np.asarray(blocks, np.int32)[None], n,
-                self.blocks_per_shard)[:, 0])
+                np.asarray(blocks, np.int32)[None], act,
+                self.blocks_per_shard, n_slots=self.kv_shards)[:, 0])
             for i in self.attn_layers:
                 ent = new_caches[str(i)]["self"]
                 self.pools[str(i)]["k"] = shard_scatter_kv_chunk(
                     self.pools[str(i)]["k"], lp, ent["k"][:, 0], pos,
-                    mesh=self.mesh, axis=self.shard_axis)
+                    mesh=self.mesh, axis=self.shard_axis, active=act)
                 self.pools[str(i)]["v"] = shard_scatter_kv_chunk(
                     self.pools[str(i)]["v"], lp, ent["v"][:, 0], pos,
-                    mesh=self.mesh, axis=self.shard_axis)
+                    mesh=self.mesh, axis=self.shard_axis, active=act)
             return
         blk = jnp.asarray(blocks, jnp.int32)
         for i in self.attn_layers:
@@ -732,6 +887,48 @@ class PagedKVCache:
             for part in ("k", "v"):
                 self.pools[str(i)][part] = copy_kv_block_within(
                     self.pools[str(i)][part], s, d)
+
+    # ----------------------------------------------------- live restriping
+    def restripe(self, pairs: Sequence[Tuple[int, int]]) -> None:
+        """Move the pages named by ``BlockManager.restripe``'s remap to
+        their new shards — the physical half of a live stripe resize, and
+        the only operation that ever moves a page across shards.
+
+        ``pairs`` is [(old_gid, new_gid), ...]; every pair is cross-shard
+        by construction.  The move runs as ONE ``all_to_all`` collective
+        per layer/part (kernels/flash_decode.shard_restripe_kv_blocks):
+        each shard gathers the pages it is sending (grouped by
+        destination, scratch-padded to the max pairwise count), exchanges
+        them, and scatters what it received into the new local slots.
+        Decode ticks before and after see consistent pools — the engine
+        calls BlockManager.restripe and this back-to-back in one event."""
+        if not pairs or self.kv_shards == 1:
+            return
+        n, bps = self.kv_shards, self.blocks_per_shard
+        send: List[List[List[int]]] = [[[] for _ in range(n)]
+                                       for _ in range(n)]
+        recv: List[List[List[int]]] = [[[] for _ in range(n)]
+                                       for _ in range(n)]
+        for old, new in pairs:
+            so, lo = divmod(int(old), bps)
+            sn, ln = divmod(int(new), bps)
+            send[so][sn].append(lo)
+            recv[sn][so].append(ln)
+        m = max(len(send[s][d]) for s in range(n) for d in range(n)) or 1
+        snd = np.full((n, n, m), bps, np.int32)
+        rcv = np.full((n, n, m), bps, np.int32)
+        for s in range(n):
+            for d in range(n):
+                snd[s, d, :len(send[s][d])] = send[s][d]
+                rcv[d, s, :len(recv[d][s])] = recv[d][s]
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import shard_restripe_kv_blocks
+        snd, rcv = jnp.asarray(snd), jnp.asarray(rcv)
+        for i in self.attn_layers:
+            for part in ("k", "v"):
+                self.pools[str(i)][part] = shard_restripe_kv_blocks(
+                    self.pools[str(i)][part], snd, rcv,
+                    mesh=self.mesh, axis=self.shard_axis)
 
     # -------------------------------------------------------------- decode
     def adopt(self, new_caches: dict) -> None:

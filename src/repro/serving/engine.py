@@ -264,7 +264,9 @@ class PagedDecodeState:
         page so their writes can never corrupt live data.  On a sharded
         pool the global striped ids are converted to the per-shard local
         tables (kv_shards, max_batch, npg_local) the split-KV decode
-        island consumes."""
+        island consumes — striped over the pool's LIVE width
+        (``BlockManager.active_shards``) but always with the full physical
+        row count (idle shards get all-scratch rows)."""
         from repro.serving.cache_manager import shard_block_table
         maxb = max(len(self.meta[r].blocks) for r in active)
         bt = np.full((self.max_batch, maxb), self.kv.scratch_block, np.int32)
@@ -272,8 +274,9 @@ class PagedDecodeState:
             m = self.meta[r]
             bt[m.row, :len(m.blocks)] = m.blocks
         if self.kv_shards > 1:
-            bt = shard_block_table(bt, self.kv_shards,
-                                   self.blocks.blocks_per_shard)
+            bt = shard_block_table(bt, self.blocks.active_shards,
+                                   self.blocks.blocks_per_shard,
+                                   n_slots=self.kv_shards)
         return jnp.asarray(bt)
 
     def build_caches(self, active: List[int], bt) -> dict:
@@ -450,6 +453,21 @@ class ServingEngine(Simulator):
         # and the token sequence (prompt + generated prefix) to re-prefill
         self._resume: Dict[int, List[int]] = {}
         self._resume_seq: Dict[int, np.ndarray] = {}
+        # elastic SP restripe (drain-free stripe-width resize of the paged
+        # pools) + host-prefix-cache-aware planning state
+        self.restripe_log: List[dict] = []
+        self._restripe_pending = False
+        # decode ticks that passed while recompute-preempted requests were
+        # off the batch (one count per stalled request per tick) — the
+        # "stalled decode" cost a drain-style resize pays and a live
+        # restripe avoids.  A rid stalls from its eviction until it
+        # rejoins a decode batch, which is later than its re-prefill
+        # chunk executing: the handshake transfer and row admission sit
+        # in between
+        self.stall_ticks = 0
+        self._stalled: set = set()
+        self._host_skip: Dict[int, int] = {}  # rid -> planned prefix skip
+        self.planner_promotions = 0           # host pages promoted by skips
         self.controller = rate_controller
         if rate_controller is not None:
             own = getattr(policy, "controller", None)
@@ -528,6 +546,22 @@ class ServingEngine(Simulator):
         after a decode preemption — prompt + already-generated prefix."""
         return self._resume_seq.get(rid, self.prompts[rid])
 
+    def _host_prefix_skip(self, rid: int) -> int:
+        """Prompt-prefix tokens the host prefix cache can serve without
+        prefilling them (side-effect-free peek): whole cached blocks,
+        capped so at least one token always runs through the prefill
+        (the final chunk's logits seed decode).  The planner prices the
+        remainder as chunks over this much pre-existing history and the
+        first chunk start promotes the pages (``_promote_host_prefix``)."""
+        if self.host_cache is None or not self.prefix_sharing:
+            return 0
+        seq = np.asarray(self._prefill_seq(rid))
+        bs = self.pblocks.block_size
+        hashes = block_hashes(seq, bs)
+        hits = self.host_cache.match_chain(hashes, seq, 0, bs, peek=True)
+        cap = (len(seq) - 1) // bs
+        return min(len(hits), cap) * bs
+
     def _on_arrive(self, now: float, rid: int) -> None:
         # engine-level controller observes arrivals unless the policy owns
         # the same controller (DynamicTetrisPolicy observes via on_arrival)
@@ -535,6 +569,23 @@ class ServingEngine(Simulator):
                 and getattr(self.policy, "controller", None)
                 is not self.controller):
             self.controller.observe(now)
+        skip = self._host_prefix_skip(rid)
+        if skip:
+            # host-cache-aware plan: only the uncached remainder is
+            # chunked; the cached prefix rides in as promoted pages
+            req = self.reqs[rid]
+            self.policy.on_arrival(now)
+            shadow = Request(rid=rid, arrival=now,
+                             prompt_len=req.prompt_len - skip,
+                             output_len=req.output_len, cached_tokens=skip)
+            alloc = self.policy.plan(shadow, self._pool_view(now), now)
+            if alloc is None:
+                self.rejected.append(rid)
+                return
+            self._host_skip[rid] = skip
+            self._prefill[rid] = _PrefillState()
+            self._commit_plan(now, req, alloc)
+            return
         super()._on_arrive(now, rid)
         if self.reqs[rid].chunk_plan is not None:
             self._prefill[rid] = _PrefillState()
@@ -563,6 +614,9 @@ class ServingEngine(Simulator):
             # prefill pool: keep chunk order, try again shortly
             self._push(now + 0.05, "chunk_start", payload)
             return
+        skip = self._host_skip.pop(rid, None)
+        if skip and not self._promote_host_prefix(now, rid, skip, payload):
+            return
         # prefill-direct-to-pages: grow this request's prefill-pool
         # allocation to cover the chunk, run the chunk against the paged
         # cross-chunk history, and scatter its KV into the pages — no
@@ -579,7 +633,8 @@ class ServingEngine(Simulator):
         st.logits, new_caches, st.aux = prefill_chunk_paged(
             self.params, self.cfg, self.ctx, toks, pos,
             self.pkv.pools, hist_bt, st.off, st.aux)
-        self.pkv.write_chunk(alloc, new_caches, pos)
+        self.pkv.write_chunk(alloc, new_caches, pos,
+                             active=self.pblocks.active_shards)
         st.off += L
         self.chunk_log.setdefault(rid, []).append({
             "chunk": ci, "len": L, "sp": sp,
@@ -589,6 +644,7 @@ class ServingEngine(Simulator):
             pool = self._pool_view(now)
             self.controller.observe_queue(
                 now, sum(pool.values()) / max(len(pool), 1))
+            self._maybe_restripe(now)
         if st.off >= len(seq):
             self._preempt_flags.discard(rid)   # nothing left to preempt
             prior = self._resume.pop(rid, None)
@@ -626,6 +682,7 @@ class ServingEngine(Simulator):
         token-identical."""
         req = self.reqs[rid]
         self.pblocks.release(rid)
+        self._host_skip.pop(rid, None)
         self.plan_gen[rid] = self.plan_gen.get(rid, 0) + 1
         self._cancel_bookings(now, rid, 0)
         req.chunk_plan = []
@@ -636,6 +693,117 @@ class ServingEngine(Simulator):
         req.phase = Phase.QUEUED
         self._prefill[rid] = _PrefillState()
         self._push(now + 0.05, "requeue", rid)
+
+    def _promote_host_prefix(self, now: float, rid: int, skip: int,
+                             payload) -> bool:
+        """First chunk of a host-cache-aware plan: pull the cached prefix
+        pages into the prefill pool and start the prefill at ``skip``.
+        Returns False when the chunk must not run now — prefill-pool
+        backpressure (the skip is re-armed and the chunk retried), or the
+        cache entries were evicted between planning and execution (the
+        plan is dropped and the request re-planned under what the cache
+        holds NOW; greedy determinism keeps the output token-identical)."""
+        st = self._prefill[rid]
+        seq = self._prefill_seq(rid)
+        bs = self.pblocks.block_size
+        hashes = block_hashes(np.asarray(seq[:skip]), bs)
+        promo = self.host_cache.match_chain(hashes, seq, 0, bs)
+        if len(promo) * bs < skip:
+            self._restart_prefill(now, rid)
+            return False
+        self.pblocks.open(rid)
+        if not self.pblocks.extend(rid, skip):
+            self._host_skip[rid] = skip
+            self._prefill_backpressure(now, rid, payload)
+            return False
+        blocks = self.pblocks.allocs[rid]
+        self.pkv.copy_from(self.host, promo[:len(blocks)], blocks)
+        self.planner_promotions += len(blocks)
+        st.off = skip
+        return True
+
+    # ------------------------------------------------- elastic SP restripe
+    def _pool_pairs(self):
+        return [(self.pblocks, self.pkv)] + [(d.blocks, d.kv)
+                                             for d in self.dstates]
+
+    def request_restripe(self, n: int, at: Optional[float] = None) -> None:
+        """Schedule a live stripe-width change of every paged pool to
+        ``n`` active shards (clamped per pool to its physical width).
+        The resize is drain-free: prefill chunks and decode ticks keep
+        running across it — only the pages whose owning shard changes
+        under the new ``i % n`` stripe invariant migrate, in one
+        all-to-all per pool (BlockManager.restripe ->
+        PagedKVCache.restripe).  When a pool lacks the free room to
+        receive its migrations, newest-arrival holders are preempted
+        (``reason="restripe"``) until it fits; with ``at=None`` the
+        resize fires before any other event."""
+        self._restripe_pending = True
+        self._push(0.0 if at is None else at, "restripe", int(n))
+
+    def _maybe_restripe(self, now: float) -> None:
+        """Consume the controller's SP decision at a chunk boundary: on
+        physically sharded pools a changed target stripe width schedules
+        a live restripe.  Single-device engines (physical width 1) ignore
+        decisions entirely — they ARE the fixed-SP oracle the distributed
+        tests compare against."""
+        phys = max([self.pblocks.kv_shards]
+                   + [d.blocks.kv_shards for d in self.dstates])
+        if phys <= 1 or self._restripe_pending:
+            return
+        cur = min(self.ctx.active_pool_shards or phys, phys)
+        cands = [c for c in self.spec.sp_candidates if 1 <= c <= phys]
+        tgt = self.controller.sp_decision(now, cands, cur)
+        if tgt != cur:
+            self.request_restripe(tgt, at=now)
+
+    def _restripe_room(self, now: float, n: int) -> bool:
+        """Make room for the restripe's cross-shard migrations: prefill-
+        pool holders restart youngest-first (their requeue re-plans the
+        same tokens), decode residents fall via the normal preemption
+        policy after in-flight swap-in reservations are reclaimed.
+        Returns False when some pool still cannot take its migrations
+        (the caller retries the whole resize shortly)."""
+        eff_p = min(n, self.pblocks.kv_shards)
+        while not self.pblocks.can_restripe(eff_p):
+            holders = [r for r in self._prefill
+                       if self.pblocks.allocs.get(r)]
+            if not holders:
+                break
+            self._restart_prefill(
+                now, max(holders, key=lambda r: (self.reqs[r].arrival, r)))
+        for did, d in enumerate(self.dstates):
+            eff = min(n, d.blocks.kv_shards)
+            while not d.blocks.can_restripe(eff):
+                if self._cancel_pending_swap_ins(did):
+                    continue
+                resident = [r for r in d.slots
+                            if r is not None and r in d.meta]
+                if not resident:
+                    break
+                victim = max(resident,
+                             key=lambda r: (self.reqs[r].arrival, r))
+                self._preempt_decode(now, victim, reason="restripe")
+        return (self.pblocks.can_restripe(eff_p)
+                and all(d.blocks.can_restripe(min(n, d.blocks.kv_shards))
+                        for d in self.dstates))
+
+    def _on_restripe(self, now: float, n: int) -> None:
+        if not self._restripe_room(now, n):
+            self._push(now + 0.05, "restripe", n)
+            return
+        old = min(self.ctx.active_pool_shards
+                  or max(bm.kv_shards for bm, _ in self._pool_pairs()),
+                  max(bm.kv_shards for bm, _ in self._pool_pairs()))
+        migrated = 0
+        for bm, kv in self._pool_pairs():
+            pairs = bm.restripe(min(n, bm.kv_shards))
+            kv.restripe(pairs)
+            migrated += len(pairs)
+        self.ctx = self.ctx.with_(active_pool_shards=n)
+        self.restripe_log.append({"t": now, "n_old": old, "n_new": n,
+                                  "migrated_blocks": migrated})
+        self._restripe_pending = False
 
     def _on_prefill_done(self, now: float, payload) -> None:
         rid, gen = payload
@@ -676,12 +844,18 @@ class ServingEngine(Simulator):
             req.chunk_sched = req.chunk_sched[:executed]
             self._cancel_bookings(now, rid, executed)
         remaining = len(self._prefill_seq(rid)) - st.off
-        shadow = Request(rid=rid, arrival=now, prompt_len=remaining,
-                         output_len=req.output_len)
+        # a fresh prefill (nothing executed yet) can start mid-prompt past
+        # chunks whose prefix the host cache holds, exactly like arrival
+        self._host_skip.pop(rid, None)
+        skip = self._host_prefix_skip(rid) if st.off == 0 else 0
+        shadow = Request(rid=rid, arrival=now, prompt_len=remaining - skip,
+                         output_len=req.output_len, cached_tokens=skip)
         alloc = self.policy.plan(shadow, self._pool_view(now), now)
         if alloc is None:
             self._push(now + 0.05, "requeue", rid)   # queue until it fits
             return
+        if skip:
+            self._host_skip[rid] = skip
         self._commit_plan(now, req, alloc)
 
     # ------------------------------------------------- transfer + routing
@@ -762,6 +936,7 @@ class ServingEngine(Simulator):
                  blocks, shared_tok, seq)
         d.meta[rid].hashes = list(hashes)     # chain seed for decode growth
         self.pblocks.release(rid)
+        self._stalled.discard(rid)            # back in a batch: stall over
         super()._on_transfer_done(now, rid)
         inst = self.decodes[req.decode_instance]
         if shared_tok:
@@ -888,6 +1063,7 @@ class ServingEngine(Simulator):
         req.decode_instance = None
         base = np.asarray(self.prompts[rid])
         self._resume[rid] = list(outs)
+        self._stalled.add(rid)
         self._resume_seq[rid] = (
             np.concatenate([base, np.asarray(outs[:-1], base.dtype)])
             if len(outs) > 1 else base.copy())
@@ -1004,7 +1180,7 @@ class ServingEngine(Simulator):
         floor = min(need + self._watermark_blocks(d), d.blocks.total_blocks)
         row = d.free_slot()
         if (row is None
-                or d.blocks.n_free - d.blocks.virtual_blocks < floor
+                or d.blocks.effective_free() < floor
                 or not d.blocks.reserve_virtual(
                     rid, need * d.block_size)):
             self._push(now + 0.05, "swap_in_try", rid)
@@ -1048,8 +1224,7 @@ class ServingEngine(Simulator):
             # shrink the reservation to the fresh remainder; the take over
             # a stripe-suffix of the reserved positions is always covered
             need = d.blocks.blocks_for(rec.cache_len) - len(shared)
-            d.blocks.virtual_tokens[rid] = need * d.block_size
-            d.blocks.virtual_offset[rid] = len(shared)
+            d.blocks.update_virtual(rid, need * d.block_size, len(shared))
             self.swap.counters["swap_in_shared_blocks"] += len(shared)
         blocks = d.blocks.commit(rid, shared=shared)
         d.kv.copy_from(self.host, rec.host_blocks[len(shared):],
@@ -1087,8 +1262,7 @@ class ServingEngine(Simulator):
             if rec.did == did and rec.row is not None:
                 d.slots[rec.row] = None
                 rec.row = None
-                d.blocks.virtual_tokens.pop(rid, None)
-                d.blocks.virtual_offset.pop(rid, None)
+                d.blocks.cancel_virtual(rid)
                 inst.swap_in_cancel(self.reqs[rid], rec.cache_len)
                 return True
         return False
@@ -1102,11 +1276,13 @@ class ServingEngine(Simulator):
                "bytes_in": 0.0, "fallback_recompute": 0, "swapped_now": 0,
                "swap_in_shared_blocks": 0, "demote_gathers": 0,
                "host_blocks_in_use": 0, "host_peak_blocks": 0,
-               "demotions": 0, "host_prefix_hits": 0, "cache_evictions": 0}
+               "demotions": 0, "host_prefix_hits": 0, "cache_evictions": 0,
+               "planner_promotions": 0}
         if self.swap is None:
             return out
         out.update(self.swap.counters)
         out["demote_gathers"] = self._demote_gathers
+        out["planner_promotions"] = self.planner_promotions
         out["swapped_now"] = len(self.swap.records)
         out["host_blocks_in_use"] = (self.host.total_blocks
                                      - self.host.n_free)
@@ -1160,8 +1336,9 @@ class ServingEngine(Simulator):
                 # swap-in; reclaim those reservations before anyone falls.
                 # ``fits`` is the per-shard exact check — a striped pool
                 # can exhaust the target shard while others still have
-                # room; the watermark heuristic stays total-block based
-                eff = bm.n_free - bm.virtual_blocks
+                # room; the watermark compare uses the per-shard-scaled
+                # effective free count for the same reason
+                eff = bm.effective_free()
                 fits = (bm.can_take_at(m.cache_len // bm.block_size)
                         if cow else bm.can_extend(rid, m.cache_len + 1))
                 if ((not fits or eff - need < floor)
@@ -1190,6 +1367,11 @@ class ServingEngine(Simulator):
 
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
+        # every tick that passes while a recompute-preempted request is
+        # away (re-prefilling, in transfer, or waiting on a batch row) is
+        # a stalled token for that request — the drain-vs-restripe
+        # benchmark's cost metric
+        self.stall_ticks += len(self._stalled)
         self._grow_or_preempt(now, did)
         # rows claimed by an in-flight swap-in have no meta yet: the KV is
         # still crossing PCIe, so they sit this tick out

@@ -42,6 +42,11 @@ class Request:
     chunk_sched: List[tuple] = field(default_factory=list)
     chunk_exec: List[float] = field(default_factory=list)
     preemptions: int = 0                   # mid-prefill preempt/requeue count
+    # prompt-prefix tokens whose KV the host prefix cache already holds at
+    # planning time: the chunk planner prices chunks as running over this
+    # much pre-existing context (the engine promotes the pages and starts
+    # the prefill mid-prompt — serving/engine.py planner skip)
+    cached_tokens: int = 0
 
     @property
     def ttft(self) -> Optional[float]:

@@ -74,7 +74,8 @@ class TetrisPolicy(Policy):
 
     def plan(self, req, pool, now):
         return self.sched.schedule(req.prompt_len, pool,
-                                   improvement_rate=self.rate_fn(now))
+                                   improvement_rate=self.rate_fn(now),
+                                   cached_tokens=req.cached_tokens)
 
 
 class DynamicTetrisPolicy(Policy):
@@ -92,7 +93,8 @@ class DynamicTetrisPolicy(Policy):
 
     def plan(self, req, pool, now):
         return self.sched.schedule(req.prompt_len, pool,
-                                   improvement_rate=self.controller.rate(now))
+                                   improvement_rate=self.controller.rate(now),
+                                   cached_tokens=req.cached_tokens)
 
 
 class SingleChunkPolicy(Policy):

@@ -1,0 +1,152 @@
+"""Subprocess: live elastic restriping of the sharded paged pools.
+
+The engine starts on a 4-device mesh with its paged pools elastically
+narrowed to 2 active shards (pages stripe over half the physical pool),
+then — with residents live in the decode batch and NO drain — restripes
+2 -> 4 and later 4 -> 2.  Each resize migrates exactly the pages whose
+owning shard changes under the new ``i % n`` stripe invariant (one
+all-to-all per pool) while decode ticks keep running.  A second trace
+narrows 4 -> 2 MID-PREFILL, with live first-chunk pages in the striped
+prefill pool.  Generation must be token-for-token identical to the
+fixed-SP single-device engine (the oracle, which never restripes) and
+to the dense autoregressive model, and the resizes must be genuinely
+drain-free: zero preemptions, zero stalled decode ticks."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.chunk_planner import Allocation, Chunk
+from repro.core.improvement_rate import DynamicRateController
+from repro.core.latency_model import table1_model
+from repro.models.params import init_params
+from repro.models.sharding import CPU_CTX, ExecContext
+from repro.models.transformer import forward
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec, Policy
+
+assert jax.device_count() == 4, jax.device_count()
+MODEL = table1_model()
+
+
+class ParallelTwoChunkPolicy(Policy):
+    name = "parallel_two_chunk"
+
+    def plan(self, req, pool, now):
+        L = req.prompt_len
+        base = (2 * req.rid) % (self.spec.n_prefill - 1)
+        if L >= 32:
+            l0 = L // 2
+            t_q = pool[base]
+            t0 = t_q + self.model.latency(1, 0, l0)
+            t1 = max(t0, pool[base + 1]) + self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (base,), t_q, t0),
+                               Chunk(L - l0, (base, base + 1), t0, t1)])
+        t_q = pool[base]
+        t_p = self.model.latency(1, 0, L)
+        return Allocation([Chunk(L, (base,), t_q, t_q + t_p)])
+
+
+def generate_dense(params, cfg, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        t = jnp.asarray(toks)[None]
+        pos = jnp.arange(len(toks), dtype=jnp.int32)[None]
+        logits, _, _ = forward(params, cfg, CPU_CTX, t, pos, "train")
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
+    return toks[len(prompt):]
+
+
+def run(ctx, prompts, restripes=(), controller=None):
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        ctx=ctx, max_batch=4, max_seq=256, block_size=16,
+                        rate_controller=controller)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, arrival=i * 0.001, prompt_len=len(p),
+                           output_len=8), p)
+    for n, at in restripes:
+        eng.request_restripe(n, at=at)
+    outs = eng.serve()
+    return eng, outs
+
+
+cfg = get_config("yi-9b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("x",))
+ctx = ExecContext(mesh=mesh, sp_axis="x", kv_split_axis="x")
+
+rng = np.random.default_rng(7)
+prompts = [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+           for L in (64, 56, 64)]
+
+# fixed-SP oracles: the single-device engine and the dense model
+_, outs_cpu = run(CPU_CTX, prompts)
+for i, p in enumerate(prompts):
+    want = generate_dense(params, cfg, p, len(outs_cpu[i]))
+    assert outs_cpu[i] == want, f"rid {i}: {outs_cpu[i]} != {want}"
+print("single-device fixed-SP oracle == dense model")
+
+# baseline sharded run (full width throughout) for the resize timestamps
+eng0, outs0 = run(ctx, prompts)
+assert outs0 == outs_cpu, "sharded engine diverged from the oracle"
+tt = eng0.reqs[0].token_times
+
+# live resizes: start narrowed to 2 active shards (before any prefill),
+# widen 2 -> 4 mid-decode, narrow 4 -> 2 later — residents stay put
+t_up = 0.5 * (tt[2] + tt[3])
+t_down = 0.5 * (tt[4] + tt[5])
+eng, outs = run(ctx, prompts,
+                restripes=[(2, None), (4, t_up), (2, t_down)])
+assert outs == outs_cpu, "restriped engine diverged from fixed-SP oracle"
+log = eng.restripe_log
+assert [e["n_new"] for e in log] == [2, 4, 2], log
+assert log[0]["migrated_blocks"] == 0, "resize before any pages: no moves"
+assert log[1]["migrated_blocks"] > 0, "2 -> 4 must migrate live pages"
+assert log[2]["migrated_blocks"] > 0, "4 -> 2 must migrate live pages"
+assert not eng.preempt_log, "live restripe must not preempt anyone"
+assert eng.stall_ticks == 0, "live restripe must not stall decode"
+d = eng.dstates[0]
+assert d.blocks.active_shards == 2 and eng.pblocks.active_shards == 2
+bm = d.blocks
+assert bm.n_free == bm.total_blocks and not bm.allocs
+print("live 2->4->2 restripe under residents token-identical, drain-free")
+
+# mid-prefill resize: narrow 4 -> 2 exactly at rid 0's second chunk's
+# scheduled start (the restripe event was pushed before serve, so it
+# fires first at the tie) — every request's first-chunk pages are then
+# live in the striped PREFILL pool, and at 3 blocks per holder the
+# narrowing must migrate stripe position 2 of each
+big = [rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+       for _ in range(2)]
+_, outs_cpu_b = run(CPU_CTX, big)
+eng_b0, outs_b0 = run(ctx, big)
+assert outs_b0 == outs_cpu_b, "sharded 96-token baseline diverged"
+s1 = eng_b0.reqs[0].chunk_sched[1][0]
+eng_b, outs_b = run(ctx, big, restripes=[(2, s1)])
+assert outs_b == outs_cpu_b, "mid-prefill restripe diverged from oracle"
+logb = eng_b.restripe_log
+assert logb and logb[0]["n_new"] == 2 and logb[0]["migrated_blocks"] > 0, \
+    logb
+assert not eng_b.preempt_log and eng_b.stall_ticks == 0
+print("mid-prefill 4->2 restripe migrates live prefill pages")
+
+# controller-driven resize: sustained queue backlog at a chunk boundary
+# steps the stripe width down one sp_candidate (no manual request)
+ctl = DynamicRateController(table={}, window=30.0)
+for k in range(20):
+    ctl.observe_queue(-1e-3 * k, 5.0)     # pre-loaded pressure > 1.5 s
+eng2, outs2 = run(ctx, prompts, controller=ctl)
+assert outs2 == outs_cpu, "controller-resized engine diverged"
+assert eng2.restripe_log and eng2.restripe_log[0]["n_new"] == 2, \
+    eng2.restripe_log
+print("controller steps stripe width down under backlog")
+
+print("DIST_OK")

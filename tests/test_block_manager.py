@@ -36,13 +36,22 @@ def check_invariants(bm: BlockManager):
         assert bm.hash_of.get(b) == h
     assert bm.virtual_blocks >= 0
     assert bm.peak_in_use <= bm.total_blocks
-    # striped pools: position i of any allocation sits on shard i % n, and
-    # every free block sits on its own shard's free list
+    # the incrementally-maintained per-shard virtual tally must always
+    # equal the from-scratch recompute (reserve/commit/cancel/update all
+    # feed _virt_add; restripe re-tallies wholesale)
+    assert bm._virt_shard == bm._virtual_by_shard(), "virtual tally drift"
+    assert 1 <= bm.active_shards <= bm.kv_shards
+    # striped pools: position i of any allocation sits on shard i % n for
+    # the LIVE stripe width, and every free block sits on its own shard's
+    # free list
     for blocks in bm.allocs.values():
         for i, b in enumerate(blocks):
-            assert bm.shard_of(b) == i % bm.kv_shards, "stripe drift"
+            assert bm.shard_of(b) == i % bm.active_shards, "stripe drift"
     for s, fl in enumerate(bm.shard_free):
         assert all(bm.shard_of(b) == s for b in fl), "free list cross-shard"
+    # idle shards (>= active) hold no allocated blocks and no virtuals
+    for s in range(bm.active_shards, bm.kv_shards):
+        assert bm._virt_shard[s] == 0, "virtual on an idle shard"
 
 
 def apply_ops(ops, kv_shards: int = 1):
@@ -90,6 +99,25 @@ def apply_ops(ops, kv_shards: int = 1):
                 toks = rng.integers(0, 50, len(bm.allocs[rid]) * BS)
                 bm.register_hashes(
                     rid, block_hashes(toks, BS)[:len(bm.allocs[rid])])
+        elif kind == 6:                                 # pending virtuals
+            if rid in bm.virtual_tokens:
+                if n % 3 == 0:
+                    bm.cancel_virtual(rid)
+                else:
+                    bm.update_virtual(rid, n, (n // BS) % 3)
+            elif rid not in bm.allocs:
+                bm.reserve_virtual(rid, n, offset=n % 2)
+        elif kind == 7:                                 # live restripe
+            new_n = n % bm.kv_shards + 1
+            if bm.can_restripe(new_n):
+                pairs = bm.restripe(new_n)
+                assert bm.active_shards == new_n
+                for old, new in pairs:
+                    assert bm.shard_of(old) != bm.shard_of(new), \
+                        "restripe pair stayed on-shard"
+        check_invariants(bm)
+    for rid in list(bm.virtual_tokens):
+        bm.cancel_virtual(rid)
         check_invariants(bm)
     for rid in list(bm.allocs):
         bm.release(rid)
@@ -98,7 +126,7 @@ def apply_ops(ops, kv_shards: int = 1):
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_never_leak_or_double_free(ops):
@@ -106,14 +134,25 @@ def test_random_sequences_never_leak_or_double_free(ops):
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_striped_pool(ops):
     """Same invariants on a 2-way striped pool, plus: allocation position
-    i always sits on shard i % 2, CoW replacements stay on-shard, and
-    per-shard free lists never cross."""
+    i always sits on shard i % active, CoW replacements stay on-shard,
+    per-shard free lists never cross, and live restripes (op kind 7)
+    preserve every invariant mid-sequence."""
     apply_ops(ops, kv_shards=2)
+
+
+@settings(max_examples=40)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
+                          st.integers(1, 4 * BS)),
+                min_size=1, max_size=60))
+def test_random_sequences_striped_pool_4way(ops):
+    """4-way physical pool: restripes walk 1..4 active shards under live
+    allocations, reservations and prefix sharing."""
+    apply_ops(ops, kv_shards=4)
 
 
 def test_striped_take_respects_per_shard_exhaustion():
@@ -144,6 +183,38 @@ def test_striped_take_respects_per_shard_exhaustion():
     for rid in (1, 2, 3):
         bm.release(rid)
     assert bm.n_free == bm.total_blocks
+
+
+def test_effective_free_sees_shard_exhaustion():
+    """Regression: freeness()/effective_free() on a striped pool must min
+    over PER-SHARD free blocks (scaled back to pool units), not report
+    the global count — one exhausted shard blocks every new stripe even
+    while the other shards hold plenty of free pages."""
+    bm = BlockManager(total_blocks=8, block_size=4, kv_shards=2)
+    # occupy 3 of 4 shard-0 blocks and 1 of 4 shard-1 blocks
+    assert bm.reserve_virtual(1, 3 * 4) and bm.commit(1)   # s0,s1,s0
+    assert bm.reserve_virtual(2, 4) and bm.commit(2)       # s0
+    assert len(bm.shard_free[0]) == 1 and len(bm.shard_free[1]) == 3
+    assert bm.n_free == 4
+    assert bm.effective_free() == 2 * 1          # min-shard * kv_shards
+    assert bm.freeness(0) == pytest.approx(2 / 1.0)
+    # a pending reservation on shard 0 exhausts it virtually
+    assert bm.reserve_virtual(3, 4)              # offset 0 -> shard 0
+    assert bm.effective_free() == 0, "exhausted shard must zero freeness"
+    assert bm.freeness(0) == 0.0
+    assert bm.n_free == 4, "global count alone would hide the exhaustion"
+    bm.cancel_virtual(3)
+    assert bm.effective_free() == 2
+    # narrowing the stripe makes the idle shard's pages unreachable too:
+    # after restripe to 1 active shard, only shard-0 free blocks count
+    pairs = bm.restripe(1)
+    assert bm.active_shards == 1
+    assert all(bm.shard_of(o) != bm.shard_of(nw) for o, nw in pairs)
+    assert bm.effective_free() == len(bm.shard_free[0])
+    for rid in (1, 2):
+        bm.release(rid)
+    assert bm.n_free == bm.total_blocks
+    check_invariants(bm)
 
 
 def test_shared_release_keeps_sibling_blocks():

@@ -185,3 +185,24 @@ def test_dynamic_rate_controller():
     for t in np.arange(10, 20, 0.25):     # 4 req/s
         ctl.observe(float(t))
     assert ctl.rate(20.0) == 0.6
+
+
+def test_sp_decision_steps_one_candidate_at_a_time():
+    ctl = DynamicRateController({}, window=10.0)
+    cands = (1, 2, 4, 8)
+    # empty window -> pressure 0 < 0.5: step UP one candidate
+    assert ctl.sp_decision(0.0, cands, 2) == 4
+    assert ctl.sp_decision(0.0, cands, 8) == 8     # already at the top
+    # sustained backlog -> pressure > 1.5: step DOWN one candidate
+    for k in range(5):
+        ctl.observe_queue(float(k), 5.0)
+    assert ctl.queue_pressure(5.0) > 1.5
+    assert ctl.sp_decision(5.0, cands, 4) == 2
+    assert ctl.sp_decision(5.0, cands, 1) == 1     # already at the bottom
+    # moderate backlog -> hold steady
+    ctl2 = DynamicRateController({}, window=10.0)
+    for k in range(5):
+        ctl2.observe_queue(float(k), 1.0)
+    assert ctl2.sp_decision(5.0, cands, 4) == 4
+    # a current width outside the candidate set still steps sanely
+    assert ctl.sp_decision(5.0, (2, 8), 4) == 2
