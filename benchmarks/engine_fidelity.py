@@ -15,12 +15,16 @@ on/off) and reports the prefix-hit rate, peak blocks in use and output
 equality; a fourth squeezes the tight-pool trace through BOTH preemption
 policies (swap-to-host vs recompute) and reports recomputed prefill
 tokens, TTFT/worst-TBT deltas, PCIe swap bytes and host-prefix-cache
-hits; a fifth compares a live elastic restripe of the sharded pools
+hits; a fifth serves a colocated mixed prefill/decode trace twice
+(decode piggybacking on vs off) and reports median/p99 TBT of the
+resident decoder while long prefills are in flight — tokens must match
+bit-for-bit, only the latency distribution moves; a sixth compares a
+live elastic restripe of the sharded pools
 (SP width resize mid-decode, pages migrating cross-shard) against the
 drain-based alternative (preempt every resident, resize, re-prefill) —
 both token-identical, but drain stalls decode ticks where restripe
 stalls none (needs >= 2 host devices; skipped with a sentinel row
-otherwise); a sixth micro-benchmarks the donated page-scatter helpers
+otherwise); a seventh micro-benchmarks the donated page-scatter helpers
 (the per-tick pool-update cost that ``donate_argnums`` keeps from
 functionally rebuilding the pool arrays).
 
@@ -192,6 +196,63 @@ def run(quick: bool = False):
           f"host prefix hits {sw_st['host_prefix_hits']} | outputs match "
           f"roomy run: swap={sw_match} recompute={rec_match}")
 
+    # --- mixed prefill/decode steps: TBT while a long prefill is in
+    # flight.  A resident decoder (rid 0) keeps generating while two long
+    # prompts prefill on colocated instances.  With piggybacking ON its
+    # ticks fuse into the chunk windows at the mixed-step rate; OFF, they
+    # defer to each window's end (serialized stall).  Tokens must be
+    # bit-identical either way — the delta is purely the TBT percentiles.
+    # Runs the single-device engine explicitly (CPU_CTX): CI's bench job
+    # forces a 4-device host, and this segment measures step fusion, not
+    # sharding.
+    from repro.models.sharding import CPU_CTX
+
+    tbt_rng = np.random.default_rng(13)
+    mx_prompts = [tbt_rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                  for n in (48, 256, 256)]
+
+    def serve_mixed(pig: bool):
+        s = ClusterSpec(n_prefill=16, n_decode=1, sp_candidates=(1, 2, 4))
+        e = ServingEngine(cfg, params, s,
+                          _ParallelPolicy(table1_model(), s), ctx=CPU_CTX,
+                          max_batch=4, max_seq=512, block_size=16,
+                          decode_hosts={0: tuple(range(16))},
+                          piggyback=pig)
+        for i, (p, a, o) in enumerate(zip(mx_prompts, (0.0, 0.1, 0.2),
+                                          (30, 8, 8))):
+            e.submit(Request(rid=i, arrival=a, prompt_len=len(p),
+                             output_len=o), p)
+        t0 = time.perf_counter()
+        out = e.serve()
+        return e, out, time.perf_counter() - t0
+
+    mx_on, mx_on_out, mx_wall = serve_mixed(True)
+    mx_off, mx_off_out, _ = serve_mixed(False)
+    mx_match = mx_on_out == mx_off_out
+    # "during prefill" = rid 0 ticks landing inside the long prompts' busy
+    # windows (same windows either way: chunk scheduling is unaffected by
+    # how the colocated ticks execute) — ticks outside the windows have
+    # identical timing by construction and would only dilute the metric
+    mx_win = [(c["exec_start"],
+               c["exec_start"] + c["sched_end"] - c["sched_start"])
+              for rid in (1, 2) for c in mx_off.chunk_log.get(rid, [])]
+
+    def _win_tbts(e):
+        ts = e.reqs[0].token_times
+        return [b - a for a, b in zip(ts, ts[1:])
+                if any(w0 <= b <= w1 + 0.05 for w0, w1 in mx_win)]
+
+    tb_on, tb_off = _win_tbts(mx_on), _win_tbts(mx_off)
+    med_on, med_off = float(np.median(tb_on)), float(np.median(tb_off))
+    p99_on = float(np.percentile(tb_on, 99))
+    p99_off = float(np.percentile(tb_off, 99))
+    mx_ms = mx_on.mixed_stats
+    print(f"tbt during prefill: median {med_on * 1e3:.2f}ms piggyback vs "
+          f"{med_off * 1e3:.2f}ms serialized | p99 {p99_on * 1e3:.2f}ms vs "
+          f"{p99_off * 1e3:.2f}ms | {mx_ms['piggyback_ticks']} fused / "
+          f"{mx_off.mixed_stats['deferred_ticks']} deferred ticks | "
+          f"outputs match: {mx_match}")
+
     # --- elastic restripe vs drain: resizing the live SP stripe width.
     # The drain-free path migrates only the pages whose owning shard
     # changes (one all-to-all per pool) while decode keeps ticking; the
@@ -309,6 +370,12 @@ def run(quick: bool = False):
                 f"|pcie_mib={(sw_st['bytes_out'] + sw_st['bytes_in']) / 2**20:.1f}"
                 f"|hosthits={sw_st['host_prefix_hits']}"
                 f"|match={int(sw_match and rec_match)}"),
+        fmt_row("engine.tbt_during_prefill",
+                mx_wall * 1e6 / max(sum(len(t) for t in mx_on_out.values()),
+                                    1),
+                f"med_on={med_on:.4f}|med_off={med_off:.4f}"
+                f"|p99_on={p99_on:.4f}|p99_off={p99_off:.4f}"
+                f"|match={int(mx_match)}"),
         restripe_row,
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
     ]

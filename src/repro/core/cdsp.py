@@ -17,6 +17,13 @@ its history re-shard over a larger group IS the paper's "cache balancing"
 step (a DMA reshard on TPU), and the layer-wise overlap of Sec. 4.1
 corresponds to XLA's latency-hiding scheduler overlapping the reshard
 collective with the FC compute of the adjacent layers.
+
+Chunk *sizing* lives in core/chunk_planner.py (Algorithm 3 against the
+Eq. (1) latency model).  When the serving engine colocates decode with
+prefill instances (mixed prefill/decode steps, serving/engine.py), the
+planner's ``piggyback_overhead`` reserves part of each chunk's queue-gap
+budget for the decode ticks that will ride the chunk's step — the chunk
+execution here is unchanged; only its planned size and window move.
 """
 
 from __future__ import annotations

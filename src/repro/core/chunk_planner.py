@@ -58,13 +58,21 @@ class CDSPScheduler:
                  nodes: Optional[Dict[int, int]] = None,
                  node_size: int = 8,
                  min_chunk_tokens: int = 2048,
-                 improvement_rate: float = 0.3):
+                 improvement_rate: float = 0.3,
+                 piggyback_overhead: float = 0.0):
         self.model = model
         self.sp_candidates = tuple(sorted(sp_candidates or model.sp_sizes))
         self.nodes = nodes                    # instance -> node
         self.node_size = node_size
         self.min_chunk_tokens = min_chunk_tokens
         self.improvement_rate = improvement_rate
+        # mixed prefill/decode steps (serving/engine.py piggybacking):
+        # expected seconds of piggybacked decode work fused into each chunk
+        # step.  Eq. (1) pricing then (a) shrinks the queue-gap budget a
+        # chunk may fill, leaving room for the decode ticks, and (b) widens
+        # every chunk window by the same amount so downstream queue-delay
+        # estimates stay honest.  0.0 = pure-prefill pricing (default).
+        self.piggyback_overhead = piggyback_overhead
 
     # ------------------------------------------------------------ topology
     def _node_of(self, i: int) -> int:
@@ -168,7 +176,7 @@ class CDSPScheduler:
             if group is None:
                 continue
             t_queue = max((pool[i] for i in group), default=0.0)
-            t_prefill = self.model.latency(s, C, L)
+            t_prefill = self.model.latency(s, C, L) + self.piggyback_overhead
             ttft = t_queue + t_prefill
             # expand SP only when the gain clears the load-aware threshold
             if ttft < opt_ttft * (1.0 - rate):
@@ -189,11 +197,14 @@ class CDSPScheduler:
             return None
         t_q_cur = max((pool[i] for i in cur_group), default=0.0)
         t_q_next = max((pool[i] for i in next_group), default=0.0)
-        budget = t_q_next - t_q_cur
+        # the piggybacked decode ticks ride inside this chunk's step, so
+        # they consume part of the queue-gap budget the chunk may fill
+        budget = t_q_next - t_q_cur - self.piggyback_overhead
         l_chunk = int(min(L, self.model.solve_chunk_len(s_cur, C, budget)))
         if l_chunk <= 0 or l_chunk < self.min_chunk_tokens or l_chunk >= L:
             return None                        # illegal plan (Alg. 1 line 11)
-        t_prefill = self.model.latency(s_cur, C, l_chunk)
+        t_prefill = self.model.latency(s_cur, C, l_chunk) \
+            + self.piggyback_overhead
         return Chunk(l_chunk, cur_group, t_q_cur, t_q_cur + t_prefill)
 
     # --------------------------------------------------------- Algorithm 1
@@ -219,7 +230,7 @@ class CDSPScheduler:
             return None
         C = alloc.total_length + cached_tokens
         t_q = max((pool[i] for i in group), default=0.0)
-        t_p = self.model.latency(len(group), C, L)
+        t_p = self.model.latency(len(group), C, L) + self.piggyback_overhead
         opt = Allocation(alloc.chunks + [Chunk(L, group, t_q, t_q + t_p)])
 
         # Step 1: chunk-plan exploration

@@ -108,6 +108,21 @@ class DynamicRateController:
             return cands[i + 1]
         return current
 
+    def decode_budget(self, now: float,
+                      base: Optional[int]) -> Optional[int]:
+        """Decode-token budget per mixed prefill/decode step (the engine's
+        Sarathi-style piggybacking knob).  Sustained prefill backlog
+        (> 1.5 s mean over the window) suppresses piggybacking entirely —
+        the chunk's slack goes to draining the queue — while moderate
+        backlog (> 0.5 s) halves the configured budget.  A calm window
+        passes ``base`` through unchanged (``None`` = unbounded)."""
+        p = self.queue_pressure(now)
+        if p > 1.5:
+            return 0
+        if p > 0.5 and base is not None:
+            return base // 2
+        return base
+
     def rate(self, now: float) -> float:
         base = self._table_rate(now)
         if self.queue_gain > 0.0:

@@ -187,10 +187,18 @@ FIG2_SP_MULT = {(1, 8): 1.0, (2, 4): 1.15, (4, 2): 1.41, (8, 1): 1.83}
 @dataclass(frozen=True)
 class DecodeLatencyModel:
     """TBT model: T = mult(sp, tp) * (base + w_cache * cache_tokens
-    + w_batch * batch_tokens), calibrated per GPU budget of sp*tp chips."""
+    + w_batch * batch_tokens), calibrated per GPU budget of sp*tp chips.
+
+    ``piggyback_factor`` is the mixed-step term: the fraction of the
+    *marginal* tick cost a decode tick pays when it is fused into a
+    co-resident prefill chunk step (Sarathi-style piggybacking,
+    serving/engine.py).  The chunk's compute already streams the model
+    weights and pays the kernel-launch overhead, so a piggybacked tick
+    rides the chunk's slack instead of serializing a full step."""
     base: float = 8e-3
     w_cache: float = 1.2e-9      # s per cached token per chip-normalised
     w_batch: float = 1.5e-5
+    piggyback_factor: float = 0.35
 
     def mult(self, sp: int, tp: int) -> float:
         if (sp, tp) in FIG2_SP_MULT:
@@ -206,3 +214,15 @@ class DecodeLatencyModel:
         return self.mult(sp, tp) * (
             self.base + self.w_cache * cache_tokens / chips
             + self.w_batch * batch)
+
+    def piggyback_latency(self, batch: int, cache_tokens: float,
+                          sp: int = 1, tp: int = 8) -> float:
+        """Virtual-time cost of one decode tick executed *inside* a
+        co-resident prefill chunk's step window: only the marginal
+        attention/batch terms, scaled by ``piggyback_factor`` — the
+        ``base`` launch/weight-stream overhead is absorbed by the chunk.
+        Strictly below ``latency`` for any batch, which is what makes
+        piggybacked TBT dominate the stall-to-window-end baseline."""
+        chips = sp * tp
+        return self.mult(sp, tp) * self.piggyback_factor * (
+            self.w_cache * cache_tokens / chips + self.w_batch * batch)

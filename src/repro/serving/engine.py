@@ -359,6 +359,31 @@ class ServingEngine(Simulator):
     whose last device reference dies are demoted instead of lost, and a
     later admission whose chained hashes match promotes the pages back
     (``swap_stats`` surfaces the counters).
+
+    **Mixed prefill/decode steps** (Sarathi-style piggybacking):
+    ``decode_hosts`` maps decode instances to the prefill instances they
+    are colocated with (``None``, the default, keeps the pools fully
+    disaggregated — no step ever fuses).  When a CDSP chunk executes on
+    an instance group that hosts a colocated decode instance, that
+    instance is busy for the chunk's step window: standalone decode
+    ticks landing inside the window are *deferred* to its end
+    (``DecodeInstance.deferred_ticks``) — the serialized baseline whose
+    TBT degrades whenever a long prefill is in flight.  With
+    ``piggyback=True`` (the default when colocated) the chunk's step
+    instead executes a batch of decode ticks *inside* the window as one
+    fused step: each piggybacked tick costs
+    ``DecodeLatencyModel.piggyback_latency`` (the mixed-step term — the
+    chunk's slack, not a full serialized tick), coalescing supersedes
+    the instance's pending timeline tick exactly once, and
+    ``decode_budget`` caps the piggybacked decode tokens per fused step
+    (``None`` = the window is the only limit; a wired
+    ``DynamicRateController`` additionally squeezes the budget under
+    prefill backlog via ``decode_budget``).  Fused steps append to
+    ``mixed_log`` and the per-instance piggyback/standalone gauges;
+    scheduling-wise the chunk planner prices the expected piggyback
+    overhead into Eq. (1) (``CDSPScheduler.piggyback_overhead``).
+    Token streams are bit-identical to the non-colocated engine either
+    way — greedy decode depends only on each request's own cache.
     """
 
     def __init__(self, cfg: ModelConfig, params: dict, spec: ClusterSpec,
@@ -372,7 +397,10 @@ class ServingEngine(Simulator):
                  prefix_sharing: bool = True,
                  preempt_policy: str = "auto",
                  host_pool_blocks: Optional[int] = None,
-                 offload_model: Optional[HostOffloadModel] = None):
+                 offload_model: Optional[HostOffloadModel] = None,
+                 decode_hosts: Optional[Dict[int, tuple]] = None,
+                 piggyback: bool = True,
+                 decode_budget: Optional[int] = None):
         super().__init__(spec, policy, decode_model)
         assert spec.disaggregated, "real engine decode is disaggregated"
         if preempt_policy not in ("auto", "swap", "recompute"):
@@ -468,6 +496,24 @@ class ServingEngine(Simulator):
         self._stalled: set = set()
         self._host_skip: Dict[int, int] = {}  # rid -> planned prefix skip
         self.planner_promotions = 0           # host pages promoted by skips
+        # mixed prefill/decode steps: decode instance -> colocated prefill
+        # instances.  _busy_until marks each colocated instance's current
+        # chunk-step window; _next_tick records the LAST pushed decode_tick
+        # time per instance (last-write-wins coalescing: an event that pops
+        # earlier than the record was superseded by a fused step and is
+        # dropped — exactly once, since every push moves the record
+        # forward); _fused_tick marks the instance whose tick is currently
+        # executing inline inside a chunk step, which switches its pricing
+        # to the mixed-step term.
+        self._decode_hosts: Dict[int, frozenset] = {
+            int(d): frozenset(int(i) for i in hosts)
+            for d, hosts in (decode_hosts or {}).items()}
+        self.piggyback = piggyback
+        self.decode_budget = decode_budget
+        self._busy_until: Dict[int, float] = {}
+        self._next_tick: Dict[int, float] = {}
+        self._fused_tick: Optional[int] = None
+        self.mixed_log: List[dict] = []
         self.controller = rate_controller
         if rate_controller is not None:
             own = getattr(policy, "controller", None)
@@ -510,6 +556,14 @@ class ServingEngine(Simulator):
             t, _, kind, payload = heapq.heappop(self.events)
             getattr(self, f"_on_{kind}")(t, payload)
         return self.outputs
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        # last-write-wins tick coalescing: remember the latest scheduled
+        # tick per instance so a fused step can supersede pending timeline
+        # ticks (the stale events drop when they pop — see _on_decode_tick)
+        if kind == "decode_tick":
+            self._next_tick[int(payload)] = t
+        super()._push(t, kind, payload)
 
     def preempt(self, rid: int, at: Optional[float] = None) -> None:
         """Flag ``rid`` for preemption.
@@ -563,6 +617,7 @@ class ServingEngine(Simulator):
         return min(len(hits), cap) * bs
 
     def _on_arrive(self, now: float, rid: int) -> None:
+        self._price_piggyback(now)
         # engine-level controller observes arrivals unless the policy owns
         # the same controller (DynamicTetrisPolicy observes via on_arrival)
         if (self.controller is not None
@@ -645,6 +700,7 @@ class ServingEngine(Simulator):
             self.controller.observe_queue(
                 now, sum(pool.values()) / max(len(pool), 1))
             self._maybe_restripe(now)
+        self._run_piggyback(now, rid, ci)
         if st.off >= len(seq):
             self._preempt_flags.discard(rid)   # nothing left to preempt
             prior = self._resume.pop(rid, None)
@@ -688,6 +744,7 @@ class ServingEngine(Simulator):
         req.chunk_plan = []
         req.chunk_sched = []
         req.chunk_exec = []
+        req.chunk_groups = []
         self.chunk_log.pop(rid, None)
         req.preemptions += 1
         req.phase = Phase.QUEUED
@@ -842,6 +899,7 @@ class ServingEngine(Simulator):
             executed = len(req.chunk_exec)
             req.chunk_plan = req.chunk_plan[:executed]
             req.chunk_sched = req.chunk_sched[:executed]
+            req.chunk_groups = req.chunk_groups[:executed]
             self._cancel_bookings(now, rid, executed)
         remaining = len(self._prefill_seq(rid)) - st.off
         # a fresh prefill (nothing executed yet) can start mid-prompt past
@@ -850,6 +908,7 @@ class ServingEngine(Simulator):
         skip = self._host_prefix_skip(rid) if st.off == 0 else 0
         shadow = Request(rid=rid, arrival=now, prompt_len=remaining - skip,
                          output_len=req.output_len, cached_tokens=skip)
+        self._price_piggyback(now)
         alloc = self.policy.plan(shadow, self._pool_view(now), now)
         if alloc is None:
             self._push(now + 0.05, "requeue", rid)   # queue until it fits
@@ -1049,6 +1108,7 @@ class ServingEngine(Simulator):
         req.chunk_plan = []
         req.chunk_sched = []
         req.chunk_exec = []
+        req.chunk_groups = []
         self.chunk_log.pop(rid, None)
         for r in inst.batch:
             if r.rid == rid:
@@ -1292,6 +1352,23 @@ class ServingEngine(Simulator):
         out["cache_evictions"] = self.host_cache.stats["evictions"]
         return out
 
+    @property
+    def mixed_stats(self) -> Dict[str, int]:
+        """Mixed-step gauges summed over the decode instances: ticks and
+        batch tokens executed piggybacked inside chunk-step windows vs as
+        standalone timeline events, standalone ticks deferred to a busy
+        window's end, and the number of fused steps logged."""
+        out = {"piggyback_ticks": 0, "piggyback_tokens": 0,
+               "standalone_ticks": 0, "standalone_tokens": 0,
+               "deferred_ticks": 0, "fused_steps": len(self.mixed_log)}
+        for inst in self.decodes:
+            out["piggyback_ticks"] += inst.piggyback_ticks
+            out["piggyback_tokens"] += inst.piggyback_tokens
+            out["standalone_ticks"] += inst.standalone_ticks
+            out["standalone_tokens"] += inst.standalone_tokens
+            out["deferred_ticks"] += inst.deferred_ticks
+        return out
+
     def _grow_or_preempt(self, now: float, did: int) -> None:
         """Before a decode step: honour manual decode-preempt flags, then
         make every resident's append target writable — extend allocations
@@ -1365,8 +1442,110 @@ class ServingEngine(Simulator):
                 if victim == rid:
                     break
 
+    # ------------------------------------------- mixed prefill/decode steps
+    def _price_piggyback(self, now: float) -> None:
+        """Before planning: price the expected piggyback overhead of one
+        chunk step into the scheduler's Eq. (1) budget — the cost of one
+        fused decode tick over the busiest colocated instance's current
+        batch.  Zero when nothing is colocated (or piggybacking is off),
+        which keeps non-colocated engines byte-identical to the planner's
+        pure-prefill pricing."""
+        sched = getattr(self.policy, "sched", None)
+        if sched is None:
+            return
+        over = 0.0
+        if self._decode_hosts and self.piggyback:
+            for did in self._decode_hosts:
+                inst = self.decodes[did]
+                if inst.batch:
+                    cache = sum(r.cache_tokens for r in inst.batch)
+                    over = max(over, self.decode_model.piggyback_latency(
+                        len(inst.batch), cache, tp=self.spec.tp_decode))
+        sched.piggyback_overhead = over
+
+    def _decode_budget_now(self, now: float) -> float:
+        """Piggybacked decode tokens allowed per fused step right now —
+        the configured ``decode_budget`` knob, squeezed by the controller
+        under prefill backlog (``DynamicRateController.decode_budget``)."""
+        base = self.decode_budget
+        if self.controller is not None:
+            base = self.controller.decode_budget(now, base)
+        return float("inf") if base is None else float(base)
+
+    def _run_piggyback(self, now: float, rid: int, ci: int) -> None:
+        """The mixed-step half of a chunk event: the chunk that just ran
+        occupies its instance group for the step window ``[now, now +
+        chunk_duration)``.  Every colocated decode instance becomes busy
+        for the window; with piggybacking enabled its resident batch then
+        ticks *inside* the window as part of this fused step — each tick
+        at ``piggyback_latency`` cost — until the window, the decode
+        budget, or the batch runs out.  Inline ticks run through the
+        normal ``_on_decode_tick`` path (real forward, preemption, CoW,
+        hash publishing all included), so a fused step is behaviourally a
+        timeline tick that happens to cost the chunk's slack."""
+        if not self._decode_hosts:
+            return
+        req = self.reqs[rid]
+        group = set(req.chunk_groups[ci])
+        s0, s1 = req.chunk_sched[ci]
+        t_end = now + max(0.0, s1 - s0)
+        for did, hosts in self._decode_hosts.items():
+            if not (group & hosts):
+                continue
+            self._busy_until[did] = max(self._busy_until.get(did, 0.0),
+                                        t_end)
+            if not self.piggyback:
+                continue
+            inst = self.decodes[did]
+            budget = self._decode_budget_now(now)
+            ticks, toks = 0, 0
+            t = max(now, self._next_tick.get(did, now))
+            while inst.batch:
+                cache = sum(r.cache_tokens for r in inst.batch)
+                pdt = self.decode_model.piggyback_latency(
+                    len(inst.batch), cache, tp=self.spec.tp_decode)
+                nb = len(inst.batch)
+                if t + pdt > t_end + 1e-12 or toks + nb > budget:
+                    break
+                self._fused_tick = did
+                try:
+                    self._on_decode_tick(t, did)
+                finally:
+                    self._fused_tick = None
+                ticks += 1
+                toks += nb
+                t = self._next_tick.get(did, t + pdt)
+            if ticks:
+                self.mixed_log.append({
+                    "t": now, "rid": rid, "chunk": ci, "instance": did,
+                    "ticks": ticks, "tokens": toks, "window": t_end - now})
+
+    def _tick_latency(self, d) -> float:
+        if self._fused_tick == d.did:
+            cache = sum(r.cache_tokens for r in d.batch)
+            return self.decode_model.piggyback_latency(
+                len(d.batch), cache, tp=self.spec.tp_decode)
+        return super()._tick_latency(d)
+
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
+        inst = self.decodes[did]
+        fused = self._fused_tick == did
+        if not fused:
+            nt = self._next_tick.get(did)
+            if nt is not None and now < nt - 1e-12:
+                # superseded: a fused step already ran this tick inside a
+                # chunk window and re-armed the chain later — dropping
+                # here is the "cancelled exactly once" half of coalescing
+                return
+            bu = self._busy_until.get(did, 0.0)
+            if now < bu - 1e-12 and inst.batch:
+                # colocated hosts are inside a prefill chunk's step
+                # window: a standalone tick cannot run until it ends
+                # (piggybacked ticks already ran as part of the step)
+                inst.deferred_ticks += 1
+                self._push(bu, "decode_tick", did)
+                return
         # every tick that passes while a recompute-preempted request is
         # away (re-prefilling, in transfer, or waiting on a batch row) is
         # a stalled token for that request — the drain-vs-restripe
@@ -1376,6 +1555,13 @@ class ServingEngine(Simulator):
         # rows claimed by an in-flight swap-in have no meta yet: the KV is
         # still crossing PCIe, so they sit this tick out
         active = [r for r in d.slots if r is not None and r in d.meta]
+        if active:
+            if fused:
+                inst.piggyback_ticks += 1
+                inst.piggyback_tokens += len(active)
+            else:
+                inst.standalone_ticks += 1
+                inst.standalone_tokens += len(active)
         if active:
             B = d.max_batch
             toks = np.zeros((B, 1), np.int32)

@@ -38,9 +38,12 @@ class Request:
     chunk_plan: Optional[list] = None      # [(length, sp)] actually used
     instances: tuple = ()                  # prefill instances used
     # chunk-granular execution: scheduled (start, end) per chunk, absolute
-    # event-clock times, and the time each chunk actually executed
+    # event-clock times, the time each chunk actually executed, and the
+    # instance group each chunk runs on (mixed prefill/decode steps need
+    # the per-chunk group to find co-resident decode instances)
     chunk_sched: List[tuple] = field(default_factory=list)
     chunk_exec: List[float] = field(default_factory=list)
+    chunk_groups: List[tuple] = field(default_factory=list)
     preemptions: int = 0                   # mid-prefill preempt/requeue count
     # prompt-prefix tokens whose KV the host prefix cache already holds at
     # planning time: the chunk planner prices chunks as running over this

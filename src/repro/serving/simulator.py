@@ -211,6 +211,15 @@ class DecodeInstance:
     ticking: bool = False
     backends_free: int = 8
     transfer_queue: List[Tuple[float, Request]] = field(default_factory=list)
+    # mixed prefill/decode step gauges (real engine piggybacking): ticks
+    # and batch tokens executed fused inside a co-resident prefill chunk's
+    # step window vs as standalone timeline events, plus standalone ticks
+    # that landed inside a busy window and were deferred to its end
+    piggyback_ticks: int = 0
+    piggyback_tokens: int = 0
+    standalone_ticks: int = 0
+    standalone_tokens: int = 0
+    deferred_ticks: int = 0
 
     def freeness(self) -> float:
         return (self.slots_free - self.virtual) / (len(self.batch) + 1.0)
@@ -327,6 +336,7 @@ class Simulator:
                                                    for c in alloc.chunks]
         req.chunk_sched += [(now + c.t_start, now + c.t_end)
                             for c in alloc.chunks]
+        req.chunk_groups += [tuple(c.instances) for c in alloc.chunks]
         req.instances = tuple(dict.fromkeys(
             req.instances + alloc.instances))
         for c in alloc.chunks:
@@ -448,14 +458,20 @@ class Simulator:
             d.ticking = True
             self._push(now, "decode_tick", d.did)
 
+    def _tick_latency(self, d: DecodeInstance) -> float:
+        """Virtual-time cost of the decode step about to run on ``d``.
+        The real engine overrides this to price ticks piggybacked into a
+        co-resident prefill chunk step with the mixed-step term."""
+        cache = sum(r.cache_tokens for r in d.batch)
+        return self.decode_model.latency(len(d.batch), cache, sp=1,
+                                         tp=self.spec.tp_decode)
+
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.decodes[did]
         if not d.batch:
             d.ticking = False
             return
-        cache = sum(r.cache_tokens for r in d.batch)
-        dt = self.decode_model.latency(len(d.batch), cache, sp=1,
-                                       tp=self.spec.tp_decode)
+        dt = self._tick_latency(d)
         t_next = now + dt
         finished = []
         for r in d.batch:

@@ -1,0 +1,140 @@
+"""Subprocess: mixed prefill/decode steps on a 4-device mesh.
+
+The engine runs with its decode instance colocated on the prefill
+instances (``decode_hosts``), so every CDSP chunk step fuses a batch of
+piggybacked decode ticks into its window.  On the sharded mesh this is
+exercised together with everything piggybacking must compose with:
+
+* a mid-prefill SP change (the two-chunk CDSP plan widens SP 1 -> 2),
+* a live elastic restripe (4 -> 2) firing exactly at a chunk boundary,
+* a swap-preempted victim (``preempt_policy="swap"``) whose KV round-trips
+  through the host tier and which resumes INTO a piggybacked batch —
+  its post-resume ticks ride later fused chunk windows.
+
+Generation must be token-for-token identical to the pure-serialized
+single-device oracle (same engine, no colocation) in every trace, and
+tick conservation must hold exactly: piggybacked + standalone tokens
+== sum of output lengths."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.chunk_planner import Allocation, Chunk
+from repro.core.latency_model import table1_model
+from repro.models.params import init_params
+from repro.models.sharding import CPU_CTX, ExecContext
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec, Policy
+
+assert jax.device_count() == 4, jax.device_count()
+MODEL = table1_model()
+
+
+class ParallelTwoChunkPolicy(Policy):
+    """Two-chunk CDSP plan: SP 1 -> 2 mid-prefill, per-request groups."""
+    name = "parallel_two_chunk"
+
+    def plan(self, req, pool, now):
+        L = req.prompt_len
+        base = (2 * req.rid) % (self.spec.n_prefill - 1)
+        if L >= 32:
+            l0 = L // 2
+            t_q = pool[base]
+            t0 = t_q + self.model.latency(1, 0, l0)
+            t1 = max(t0, pool[base + 1]) + self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (base,), t_q, t0),
+                               Chunk(L - l0, (base, base + 1), t0, t1)])
+        t_q = pool[base]
+        t_p = self.model.latency(1, 0, L)
+        return Allocation([Chunk(L, (base,), t_q, t_q + t_p)])
+
+
+def run(ctx, *, colocate, piggyback=True, restripes=(), preempt_at=None):
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    hosts = {0: tuple(range(8))} if colocate else None
+    eng = ServingEngine(cfg, params, spec,
+                        ParallelTwoChunkPolicy(MODEL, spec),
+                        ctx=ctx, max_batch=4, max_seq=96, block_size=16,
+                        prefill_pool_blocks=64, decode_hosts=hosts,
+                        piggyback=piggyback, preempt_policy="swap")
+    for i, (p, o, a) in enumerate(zip(prompts, OUTS, ARRIVALS)):
+        eng.submit(Request(rid=i, arrival=a, prompt_len=len(p),
+                           output_len=o), p)
+    for n, at in restripes:
+        eng.request_restripe(n, at=at)
+    if preempt_at is not None:
+        eng.preempt(0, at=preempt_at)
+    outs = eng.serve()
+    return eng, outs
+
+
+def conserved(eng):
+    ms = eng.mixed_stats
+    total = sum(r.output_len for r in eng.reqs.values())
+    assert ms["piggyback_tokens"] + ms["standalone_tokens"] == total, \
+        (ms, total)
+    return ms
+
+
+cfg = get_config("yi-9b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("x",))
+ctx = ExecContext(mesh=mesh, sp_axis="x", kv_split_axis="x")
+
+rng = np.random.default_rng(11)
+# rid 0: long decode resident while rid 1/2 prefills (>= 32 tokens, so
+# two-chunk SP 1 -> 2 plans) arrive and ride mixed steps
+prompts = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+           for _ in range(3)]
+OUTS = [24, 8, 8]
+ARRIVALS = [0.0, 0.3, 0.45]
+
+# pure-serialized single-device oracle: no colocation, every tick its own
+# timeline event
+_, outs_cpu = run(CPU_CTX, colocate=False)
+
+# mesh + colocation: chunk steps fuse piggybacked decode ticks
+eng1, outs1 = run(ctx, colocate=True)
+assert outs1 == outs_cpu, "piggybacked mesh engine diverged from oracle"
+ms = conserved(eng1)
+assert ms["fused_steps"] > 0 and ms["piggyback_ticks"] > 0, ms
+assert any(len(r.chunk_sched) == 2 for r in eng1.reqs.values()), \
+    "expected a two-chunk (SP 1 -> 2) plan in the trace"
+print(f"mesh piggyback == serialized oracle ({ms['piggyback_ticks']} fused "
+      f"ticks over {ms['fused_steps']} mixed steps)")
+
+# restripe at a chunk boundary: narrow 4 -> 2 exactly when rid 1's second
+# chunk is scheduled to start, while piggybacked ticks keep riding windows
+s1 = eng1.reqs[1].chunk_sched[1][0]
+eng2, outs2 = run(ctx, colocate=True, restripes=[(2, s1)])
+assert outs2 == outs_cpu, "restriped piggyback run diverged from oracle"
+log = eng2.restripe_log
+assert log and log[0]["n_new"] == 2, log
+assert conserved(eng2)["piggyback_ticks"] > 0
+print("restripe at chunk boundary under mixed steps token-identical")
+
+# swap-preempt rid 0 mid-decode (between its 6th and 7th token) while the
+# later prefills are still inbound; after the host round-trip it must
+# resume into a piggybacked batch and finish identically
+tt = eng1.reqs[0].token_times
+t_pre = 0.5 * (tt[5] + tt[6])
+eng3, outs3 = run(ctx, colocate=True, preempt_at=t_pre)
+_, outs3_cpu = run(CPU_CTX, colocate=False, preempt_at=t_pre)
+assert outs3 == outs3_cpu == outs_cpu, \
+    "swap-preempted piggyback run diverged from oracle"
+pre = [p for p in eng3.preempt_log if p["rid"] == 0]
+assert len(pre) == 1 and pre[0]["policy"] == "swap", eng3.preempt_log
+assert eng3.swap_stats["swap_outs"] >= 1 and \
+    eng3.swap_stats["swap_ins"] >= 1, eng3.swap_stats
+# the victim's post-resume ticks rode fused windows
+assert any(m["t"] > t_pre for m in eng3.mixed_log), eng3.mixed_log
+conserved(eng3)
+print("swap victim resumed into a piggybacked batch, token-identical")
+
+print("DIST_OK")

@@ -92,3 +92,13 @@ def test_elastic_restripe_distributed():
     backlogged controller then steps the width down on its own at a
     chunk boundary."""
     _run("restripe_engine_prog.py")
+
+
+def test_mixed_step_distributed():
+    """Mixed prefill/decode steps on a 4-device mesh: colocated decode
+    ticks piggyback on CDSP chunk windows across a mid-prefill SP
+    change, a live restripe fired at a chunk boundary, and a
+    swap-preempted victim that resumes into a piggybacked batch — every
+    trace token-for-token identical to the pure-serialized single-device
+    oracle, with exact tick conservation."""
+    _run("mixed_step_prog.py")

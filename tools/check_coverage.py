@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""CI coverage gate for the serving engine.
+
+Parses a Cobertura ``coverage.xml`` (written by ``pytest --cov``) and
+fails if ``src/repro/serving/engine.py`` statement coverage dropped below
+the recorded floor in ``tools/coverage_baseline.json``.  The floor is a
+conservative round-down of the pre-mixed-steps tier-1 measurement, so the
+gate trips on genuine coverage regressions (tests deleted, new engine
+paths landed untested) without flaking on line-count noise.
+
+Usage: python tools/check_coverage.py [coverage.xml]
+"""
+import json
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(HERE, "coverage_baseline.json")
+
+
+def engine_line_rate(xml_path: str, filename_suffix: str) -> float:
+    root = ET.parse(xml_path).getroot()
+    for cls in root.iter("class"):
+        fn = cls.get("filename", "")
+        if fn.endswith(filename_suffix):
+            lines = cls.findall("./lines/line")
+            if lines:  # recompute: line-rate attr rounds to 4 digits
+                covered = sum(1 for l in lines if int(l.get("hits", 0)) > 0)
+                return covered / len(lines)
+            return float(cls.get("line-rate", 0.0))
+    raise SystemExit(f"{filename_suffix} not found in {xml_path} — was "
+                     "--cov=src/repro/serving passed to pytest?")
+
+
+def main() -> int:
+    xml_path = sys.argv[1] if len(sys.argv) > 1 else "coverage.xml"
+    with open(BASELINE) as f:
+        base = json.load(f)
+    failures = []
+    for suffix, floor in base["floors"].items():
+        rate = engine_line_rate(xml_path, suffix)
+        status = "OK" if rate >= floor else "FAIL"
+        print(f"{status}: {suffix} statement coverage {rate:.1%} "
+              f"(floor {floor:.1%})")
+        if rate < floor:
+            failures.append(suffix)
+    if failures:
+        print(f"coverage regression in: {', '.join(failures)} — either "
+              "restore the missing tests or (if the floor is genuinely "
+              "stale) re-measure and update tools/coverage_baseline.json "
+              "with a justification in the PR.")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
