@@ -26,7 +26,12 @@ both token-identical, but drain stalls decode ticks where restripe
 stalls none (needs >= 2 host devices; skipped with a sentinel row
 otherwise); a seventh micro-benchmarks the donated page-scatter helpers
 (the per-tick pool-update cost that ``donate_argnums`` keeps from
-functionally rebuilding the pool arrays).
+functionally rebuilding the pool arrays); an eighth (``kernel_traffic``)
+measures per-decode-tick KV traffic — the fused append+attend tick vs
+the legacy scatter-then-gather tick, with analytic bytes-moved figures
+for both — and the per-device pool footprint of the head-sharded
+(TP x SP) placement vs the replicated one, timing the fused tick through
+the sharded island on both placements (sentinel row below 4 devices).
 
 CI runs this via ``run.py --quick --only engine_fidelity --json`` and
 uploads the stable-schema ``BENCH_engine.json`` it writes at the repo
@@ -353,6 +358,142 @@ def run(quick: bool = False):
     print(f"donated page scatter: {scat_us:.0f} us/call on a "
           f"{pool_mb:.1f} MB pool (donate_argnums: in-place alias, no "
           f"functional rebuild per tick)")
+
+    # --- kernel_traffic: per-decode-tick KV bytes moved + wall time.
+    # The fused tick (ops.paged_decode_attention with k_new/v_new) writes
+    # the new token's KV into its page and attends in ONE donated
+    # dispatch, touching only valid pages (native page_pos masking); the
+    # legacy tick scatters the token first (two donated pool updates) and
+    # then attends over a gathered table-width slab.  Both produce
+    # bit-identical outputs and pools — the derived fields carry each
+    # path's analytic per-tick traffic so the perf trajectory records
+    # bytes, not just microseconds.
+    from functools import partial
+
+    from repro.kernels import ops as kops
+
+    Bt, Ht, KVHt, Dt, pg, npg = 8, 8, 4, 32, 16, 8
+    itemsz = jnp.dtype(jnp.float32).itemsize
+    krng = np.random.default_rng(23)
+    kp_t = jnp.asarray(krng.standard_normal((Bt * npg + 1, pg, KVHt, Dt)),
+                       jnp.float32)
+    vp_t = jnp.asarray(krng.standard_normal(kp_t.shape), jnp.float32)
+    bt_t = jnp.asarray(
+        krng.permutation(Bt * npg).reshape(Bt, npg).astype(np.int32))
+    len_t = jnp.asarray(krng.integers(pg, npg * pg - 1, Bt), jnp.int32)
+    q_t = jnp.asarray(krng.standard_normal((Bt, Ht, Dt)), jnp.float32)
+    kn_t = jnp.asarray(krng.standard_normal((Bt, KVHt, Dt)), jnp.float32)
+    vn_t = jnp.asarray(krng.standard_normal((Bt, KVHt, Dt)), jnp.float32)
+    ap_t = bt_t[jnp.arange(Bt), len_t // pg]
+    as_t = len_t % pg
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def _tick_scatter(kp, vp, kn, vn):
+        kp = kp.at[ap_t, as_t].set(kn)
+        vp = vp.at[ap_t, as_t].set(vn)
+        return kp, vp
+
+    def _tick_sg(kp, vp):
+        kp, vp = _tick_scatter(kp, vp, kn_t, vn_t)
+        o = kops.paged_decode_attention(q_t, kp, vp, bt_t, len_t + 1)
+        return o, kp, vp
+
+    def _tick_fused(kp, vp):
+        return kops.paged_decode_attention(
+            q_t, kp, vp, bt_t, len_t, k_new=kn_t, v_new=vn_t,
+            append_page=ap_t, append_slot=as_t)
+
+    kp_sg, vp_sg = jnp.array(kp_t), jnp.array(vp_t)
+    o_sg, kp_sg, vp_sg = _tick_sg(kp_sg, vp_sg)
+    o_fu, kp_t, vp_t = _tick_fused(kp_t, vp_t)
+    kt_match = bool(np.array_equal(np.asarray(o_sg), np.asarray(o_fu))
+                    and np.array_equal(np.asarray(kp_sg), np.asarray(kp_t)))
+    jax.block_until_ready((o_sg, o_fu))
+    t0 = time.perf_counter()
+    for _ in range(n_it):
+        o_sg, kp_sg, vp_sg = _tick_sg(kp_sg, vp_sg)
+    jax.block_until_ready(o_sg)
+    sg_us = (time.perf_counter() - t0) / n_it * 1e6
+    t0 = time.perf_counter()
+    for _ in range(n_it):
+        o_fu, kp_t, vp_t = _tick_fused(kp_t, vp_t)
+    jax.block_until_ready(o_fu)
+    fu_us = (time.perf_counter() - t0) / n_it * 1e6
+    tok_b = 2 * Bt * KVHt * Dt * itemsz                 # appended token KV
+    slab_b = 2 * Bt * npg * pg * KVHt * Dt * itemsz     # gathered slab
+    valid_pages = int(jnp.sum((len_t + 1 + pg - 1) // pg))
+    valid_b = 2 * valid_pages * pg * KVHt * Dt * itemsz  # pages attended
+    sg_kib = (tok_b + slab_b) / 1024
+    fu_kib = (tok_b + valid_b) / 1024
+    print(f"kernel traffic: fused tick {fu_us:.0f} us ({fu_kib:.0f} KiB "
+          f"valid-page traffic) vs scatter+gather {sg_us:.0f} us "
+          f"({sg_kib:.0f} KiB slab traffic) | outputs+pools bit-equal: "
+          f"{kt_match}")
+
+    # per-device pool footprint + fused tick wall time, replicated vs
+    # head-sharded (TP x SP) placement on a 2x2 mesh.  The head-sharded
+    # placement must cut per-device pool bytes exactly tp-fold while the
+    # sharded fused tick stays bit-identical between the two layouts.
+    if n_dev >= 4:
+        from jax.sharding import (Mesh, NamedSharding, PartitionSpec as Ps)
+
+        from repro.core.ring_attention import sharded_paged_decode
+        mesh22 = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                      ("sp", "tp"))
+        nloc = npg // 2
+        tab = np.zeros((2, Bt, nloc), np.int32)
+        for b in range(Bt):
+            tab[:, b] = b * nloc + np.arange(nloc)
+        bt_s = jnp.asarray(tab)
+        pool_np = krng.standard_normal(
+            (2, Bt * nloc + 1, pg, KVHt, Dt)).astype(np.float32)
+        rep_sh = NamedSharding(mesh22, Ps("sp"))
+        hs_sh = NamedSharding(mesh22, Ps("sp", None, None, "tp"))
+
+        def _put(sh):
+            return (jax.device_put(jnp.asarray(pool_np), sh),
+                    jax.device_put(jnp.asarray(pool_np), sh))
+
+        kp_r, vp_r = _put(rep_sh)
+        kp_h, vp_h = _put(hs_sh)
+        per_rep = kp_r.addressable_shards[0].data.nbytes
+        per_hs = kp_h.addressable_shards[0].data.nbytes
+
+        def _tick_sh(kp, vp, head_axis):
+            return sharded_paged_decode(
+                q_t, kp, vp, bt_s, len_t, mesh=mesh22, split_axis="sp",
+                head_axis=head_axis, k_new=kn_t, v_new=vn_t)
+
+        o_r, kp_r, vp_r = _tick_sh(kp_r, vp_r, None)
+        o_h, kp_h, vp_h = _tick_sh(kp_h, vp_h, "tp")
+        sh_match = bool(np.array_equal(np.asarray(o_r), np.asarray(o_h)))
+        jax.block_until_ready((o_r, o_h))
+        n_it_s = 20 if quick else 100
+        t0 = time.perf_counter()
+        for _ in range(n_it_s):
+            o_r, kp_r, vp_r = _tick_sh(kp_r, vp_r, None)
+        jax.block_until_ready(o_r)
+        rep_us = (time.perf_counter() - t0) / n_it_s * 1e6
+        t0 = time.perf_counter()
+        for _ in range(n_it_s):
+            o_h, kp_h, vp_h = _tick_sh(kp_h, vp_h, "tp")
+        jax.block_until_ready(o_h)
+        hs_us = (time.perf_counter() - t0) / n_it_s * 1e6
+        print(f"head-sharded pool: {per_hs / 1024:.0f} KiB/device vs "
+              f"{per_rep / 1024:.0f} KiB replicated heads "
+              f"(ratio {per_rep // per_hs}x) | sharded fused tick "
+              f"{hs_us:.0f} us vs {rep_us:.0f} us | bit-equal: {sh_match}")
+        traffic_pool_row = fmt_row(
+            "engine.kernel_traffic_pool_bytes", hs_us,
+            f"rep_us={rep_us:.1f}|per_dev_kib_hs={per_hs / 1024:.0f}"
+            f"|per_dev_kib_rep={per_rep / 1024:.0f}"
+            f"|ratio={per_rep // per_hs}|match={int(sh_match)}")
+    else:
+        print("head-sharded pool bytes: skipped (needs >= 4 host devices)")
+        traffic_pool_row = fmt_row(
+            "engine.kernel_traffic_pool_bytes", 0.0,
+            "rep_us=na|per_dev_kib_hs=na|per_dev_kib_rep=na|ratio=na"
+            "|match=na")
     return [
         fmt_row("engine.chunk_start_drift_s", wall * 1e6 / max(n_toks, 1),
                 f"{drift:.3e}"),
@@ -378,6 +519,10 @@ def run(quick: bool = False):
                 f"|match={int(mx_match)}"),
         restripe_row,
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
+        fmt_row("engine.kernel_traffic_tick_us", fu_us,
+                f"sg_us={sg_us:.1f}|fused_kib={fu_kib:.0f}"
+                f"|sg_kib={sg_kib:.0f}|match={int(kt_match)}"),
+        traffic_pool_row,
     ]
 
 

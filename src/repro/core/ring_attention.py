@@ -382,25 +382,26 @@ def sharded_paged_decode_local(q, k_loc, v_loc, bt_loc, lengths, *,
     + idx``; lengths: (B,) GLOBAL valid lengths (excluding the new token
     when ``k_new`` is given); q replicated over the axis.
 
-    The new token's K/V is scattered INSIDE the island by whichever shard
+    The new token's K/V is appended INSIDE the island by whichever shard
     owns the page that position ``lengths`` falls in (the others route the
-    write to their scratch page), then each shard runs the paged decode
-    kernel over its own pages.  Striping makes the local view contiguously
-    valid — local page j covers global tokens [(j*n+idx)*page, ...), whose
-    valid counts form a prefix — so the per-shard partial is just
-    ``ops.paged_decode_attention`` with the shard's local length, and the
-    partials merge by LSE (same combine as the dense ``split_kv_decode``).
+    write to their scratch page), FUSED with the attend: the append and
+    the per-shard paged decode run in one ``ops.paged_decode_attention``
+    invocation with the pools donated, so each tick touches the pool once
+    instead of scatter-then-gather over the same page.
 
-    A sliding ``window`` cannot be expressed as a local length for a
-    strided shard, so that path gathers the shard's pages into a local
-    positional view and masks by positions instead.
+    Length and sliding-``window`` masks are native to the stripe layout:
+    table column j holds global page ``j * n + idx``, so the shard passes
+    ``page_pos`` — each column's first-token GLOBAL position — and the
+    kernel masks by global positions directly.  No positional gather slab,
+    no contiguous local-length reduction; scratch-padded columns compute
+    positions at/past the valid length and mask themselves.
 
     ``active_shards`` (default: the full axis) is the live stripe width
     of an elastically restriped pool — logical page i is on shard ``i %
     active_shards``.  Shards at index >= active_shards hold no pages:
-    their local length masks to zero, so their partial merges with
-    weight zero (lse = NEG_INF) and the append predicate is uniformly
-    false.
+    their lengths mask to zero, so every position is invalid, their
+    partial merges with weight zero (lse = NEG_INF) and the append is
+    routed to scratch.
     """
     n = lax.psum(1, axis_name) if active_shards is None else active_shards
     idx = lax.axis_index(axis_name)
@@ -408,44 +409,33 @@ def sharded_paged_decode_local(q, k_loc, v_loc, bt_loc, lengths, *,
     B, npg = bt_loc.shape
     page = k_loc.shape[1]
     scratch = k_loc.shape[0] - 1
+    # native stripe masking: column j's first token sits at global
+    # position (j*n+idx)*page
+    gpage = jnp.arange(npg, dtype=jnp.int32) * n + idx      # (npg,)
+    page_pos = jnp.broadcast_to((gpage * page)[None], (B, npg))
     if k_new is not None:
         tgt = lengths // page                               # global page (B,)
         own = (tgt % n) == idx
         bidx = jnp.arange(B)
         safe = jnp.clip(tgt // n, 0, npg - 1)
         phys = jnp.where(own, bt_loc[bidx, safe], scratch)
-        slot = lengths % page
-        k_loc = k_loc.at[phys, slot].set(
-            jnp.where(own[:, None, None], k_new.astype(k_loc.dtype),
-                      k_loc[phys, slot]))
-        v_loc = v_loc.at[phys, slot].set(
-            jnp.where(own[:, None, None], v_new.astype(v_loc.dtype),
-                      v_loc[phys, slot]))
-        lengths = lengths + 1
-    # local contiguous validity: local page j holds global page j*n+idx
-    gpage = jnp.arange(npg, dtype=jnp.int32) * n + idx      # (npg,)
-    loc_len = jnp.sum(jnp.clip(lengths[:, None] - gpage[None] * page,
-                               0, page), axis=1)            # (B,)
-    if window is None:
-        o_i, lse_i = ops.paged_decode_attention(
-            q, k_loc, v_loc, bt_loc, loc_len,
-            softmax_scale=softmax_scale, with_lse=True, impl=impl)
+        o_i, lse_i, k_loc, v_loc = ops.paged_decode_attention(
+            q, k_loc, v_loc, bt_loc, lengths, window=window,
+            softmax_scale=softmax_scale, with_lse=True, impl=impl,
+            page_pos=page_pos, k_new=k_new, v_new=v_new,
+            append_page=phys, append_slot=lengths % page)
     else:
-        # strided shards break the "last `window` tokens are a suffix of
-        # the local view" assumption — mask by explicit global positions
-        kg, vg, pos_m = _local_page_slab(k_loc, v_loc, bt_loc, lengths,
-                                         n, idx)
-        o_i, lse_i = ops.attention(
-            q[:, None], kg, vg, q_pos=lengths[:, None] - 1, kv_pos=pos_m,
-            causal=True, window=window, softmax_scale=softmax_scale,
-            with_lse=True, impl=impl)
-        o_i, lse_i = o_i[:, 0], lse_i[:, :, 0]
+        o_i, lse_i = ops.paged_decode_attention(
+            q, k_loc, v_loc, bt_loc, lengths, window=window,
+            softmax_scale=softmax_scale, with_lse=True, impl=impl,
+            page_pos=page_pos)
     o = _lse_merge_over_axis(o_i, lse_i, axis_name)
     return o.astype(q.dtype), k_loc, v_loc
 
 
 def sharded_paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
                          mesh, split_axis: str, batch_axis=None,
+                         head_axis: Optional[str] = None,
                          window: Optional[int] = None, softmax_scale=None,
                          impl: Optional[str] = None,
                          k_new=None, v_new=None,
@@ -457,20 +447,28 @@ def sharded_paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
     engine's striped PagedKVCache layout); block_tables: (n, B, npg_local)
     per-shard local page ids; lengths: (B,) global cache lengths EXCLUDING
     the new token when (k_new, v_new): (B, KVH, D) are given — the append
-    happens inside the island on the owning shard, so pages never leave
-    their device.  Returns (o, k_pool, v_pool).  This is the paged twin of
+    happens inside the island on the owning shard, fused with the attend,
+    so pages never leave their device and each tick touches the pool once.
+    Returns (o, k_pool, v_pool).  This is the paged twin of
     ``split_kv_decode``: per-shard partial softmax over device-local pages
     + LSE merge across the axis.  ``active_shards`` narrows the stripe to
     the first so-many shards of the axis (elastic restriping) — the
     block_tables rows past it must be all-scratch
     (cache_manager.shard_block_table with ``n_slots``).
+
+    ``head_axis`` (TP) additionally shards the pool's KVH axis, plus the
+    head axes of q / k_new / v_new / o: each device stores and touches
+    only its ``KVH / tp`` slice (the head-sharded PagedKVCache layout).
+    Pass it only when KVH divides the axis — the per-shard body maps local
+    q-head groups onto local kv heads positionally, so q and KV must be
+    sliced by the SAME head partition.
     """
     body = partial(sharded_paged_decode_local, axis_name=split_axis,
                    window=window, softmax_scale=softmax_scale, impl=impl,
                    active_shards=active_shards)
-    pool_spec = P(split_axis, None, None, None)
+    pool_spec = P(split_axis, None, None, head_axis)
     bt_spec = P(split_axis, batch_axis, None)
-    rep3 = P(batch_axis, None, None)
+    rep3 = P(batch_axis, head_axis, None)
 
     if k_new is None:
         def f(q, kp, vp, bt, ln):
@@ -519,11 +517,15 @@ def ring_paged_prefill_local(q, k, v, q_pos, kv_pos, k_pool_loc, v_pool_loc,
     and every history page, without any page leaving its owner.  Partials
     merge by LSE exactly like the dense ring.
 
-    KV heads arrive replicated (the pool stores full KVH width, so the
-    chunk's own KV rides the same layout); under TP each device slices
-    out exactly the kv-head range its local q-head group reads — for
-    both the own-chunk KV and the history pool — before entering the
-    ring."""
+    KV heads arrive in one of two layouts.  Head-sharded pool (the TP×SP
+    PagedKVCache layout): the pool slice AND the chunk's own KV are
+    already the device's ``KVH / tp`` head range (the caller's in_specs
+    slice them), matching the local q-head group positionally — pass
+    ``head_shard_axis=None`` and the body does no head slicing.  Legacy
+    replicated pool (KVH not divisible by tp): KV arrives full-width and
+    ``head_shard_axis`` makes each device slice out exactly the kv-head
+    range its local q-head group reads — for both the own-chunk KV and
+    the history pool — before entering the ring."""
     if head_shard_axis is not None:
         tp = lax.psum(1, head_shard_axis)
         H_loc, KVH_full = q.shape[2], k.shape[2]
@@ -577,6 +579,7 @@ def ring_paged_prefill_local(q, k, v, q_pos, kv_pos, k_pool_loc, v_pool_loc,
 def ring_paged_prefill(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables,
                        hist_len, *, mesh, sp_axis: str,
                        head_axis: Optional[str] = None,
+                       kv_head_axis: Optional[str] = None,
                        batch_axis=None, causal: bool = True,
                        window: Optional[int] = None, softmax_scale=None,
                        impl: Optional[str] = None,
@@ -590,17 +593,26 @@ def ring_paged_prefill(q, k, v, q_pos, kv_pos, k_pool, v_pool, block_tables,
     hist_len (B,).  History pages rotate through the ring alongside the
     chunk's own KV shards — this is what deletes the dense-history
     fallback for distributed chunks (models/attention.py).  Returns
-    (B, S, H, D) sharded like the dense ring output."""
+    (B, S, H, D) sharded like the dense ring output.
+
+    ``kv_head_axis`` (TP, requires KVH divisible by the axis) marks the
+    pool as *head-sharded*: the pool's KVH axis and the own-chunk KV head
+    axis are sharded over it, so each device's ring lane carries only its
+    ``KVH / tp`` slice and the body never slices heads per call.  Leave
+    it None for the legacy replicated pool (``head_axis`` alone then
+    makes the body slice the kv-head range per device)."""
     q_spec = P(batch_axis, sp_axis, head_axis, None)
-    # own-chunk KV heads stay replicated like the pool's (sliced per
-    # device inside the body when q heads are TP-sharded)
-    kv_spec = P(batch_axis, sp_axis, None, None)
+    # own-chunk KV rides the pool's head layout: sharded over
+    # kv_head_axis for a head-sharded pool, else replicated full-width
+    # (sliced per device inside the body when q heads are TP-sharded)
+    kv_spec = P(batch_axis, sp_axis, kv_head_axis, None)
     pos_spec = P(batch_axis, sp_axis)
-    pool_spec = P(sp_axis, None, None, None, None)
+    pool_spec = P(sp_axis, None, None, kv_head_axis, None)
     bt_spec = P(sp_axis, None, None)
     body = partial(ring_paged_prefill_local, axis_name=sp_axis,
                    causal=causal, window=window, softmax_scale=softmax_scale,
-                   impl=impl, head_shard_axis=head_axis,
+                   impl=impl,
+                   head_shard_axis=None if kv_head_axis else head_axis,
                    active_shards=active_shards)
 
     def f(q, k, v, qp, kvp, kp, vp, bt, ln):

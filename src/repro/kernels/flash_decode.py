@@ -34,10 +34,13 @@ Paged variants for the serving engine's block-table KV layout
   the host KV offload tier (serving/kv_offload.py): gather pulls a
   victim's pages off the device for a swap-out / demotion, scatter lands
   host pages back into the pool for a swap-in / prefix-cache promotion.
+* ``paged_append_attend`` — the fused decode tick: writes the new token's
+  K/V into its page AND attends in one donated jitted invocation (the
+  production path behind ``ops.paged_decode_attention(..., k_new, v_new)``
+  and the sharded decode island) — the pool is touched once per tick, not
+  scatter-then-gather.
 * ``scatter_kv_token`` and ``gather_kv_pages`` are validation/debug
-  helpers only: the per-step token append happens inline in the model's
-  paged decode branch (models/attention.py), which scatters into the pool
-  and attends off it without ever materialising the dense view.
+  helpers only; the production per-step append is the fused path above.
 
 All pool-writing helpers donate their pool argument (``donate_argnums``):
 the caller rebinds the result over the input, so XLA updates the pool
@@ -287,15 +290,20 @@ def copy_kv_block_within(pool: jax.Array, src_block: jax.Array,
 # Sequence-parallel sharded pools (serving/cache_manager.PagedKVCache with
 # kv_shards > 1): per layer the pool is (nb, n_shards, blocks_per_shard + 1,
 # page, KVH, D), placed over a mesh axis, with a request's logical page i
-# striped onto shard i % n_shards.  The helpers below are shard_map bodies
-# over that axis: every page write/copy/gather happens on the device that
-# owns the page — tokens and staged pages move, pages never do.  Local page
-# id ``blocks_per_shard`` is the shard's scratch page; routing a payload at
-# scratch is the uniform-SPMD way to say "not mine".
+# striped onto shard i % n_shards.  On a 2D (SP x TP) mesh the pool is
+# additionally head-sharded: the KVH axis (pool axis 4) is placed over
+# ``head_axis`` so each device stores only its KVH / tp slice — the page
+# bodies below index pages, never heads, so the same code runs on the
+# sliced width; the head axis only appears in the partition specs.  The
+# helpers below are shard_map bodies over those axes: every page
+# write/copy/gather happens on the device that owns the page — tokens and
+# staged pages move, pages never do.  Local page id ``blocks_per_shard`` is
+# the shard's scratch page; routing a payload at scratch is the
+# uniform-SPMD way to say "not mine".
 #
-# The per-(mesh, axis) jitted wrappers are cached: the engine calls these
-# every chunk/tick with the same mesh, so the shard_map closure and its
-# donation setup are built once.
+# The per-(mesh, axis, head_axis) jitted wrappers are cached: the engine
+# calls these every chunk/tick with the same mesh, so the shard_map closure
+# and its donation setup are built once.
 
 from jax import lax
 from jax.sharding import PartitionSpec as P
@@ -303,14 +311,18 @@ from repro.compat import shard_map
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_page_ops(mesh, axis: str):
-    """Build the jitted shard_map page helpers for one (mesh, axis)."""
-    pool_spec = P(None, axis)                 # (nb, n, bps+1, page, KVH, D)
+def _sharded_page_ops(mesh, axis: str, head_axis: Optional[str] = None):
+    """Build the jitted shard_map page helpers for one (mesh, axis[, tp])."""
+    h = head_axis                             # None -> replicated KV heads
+    pool_spec = P(None, axis, None, None, h)  # (nb, n, bps+1, page, KVH, D)
     ids_spec = P(axis,)                       # leading shard axis
+    kv_spec = P(None, None, h)                # (nb, L, KVH, D) chunk payload
+    pages_spec = P(None, axis, None, None, h)  # (nb, n, m, page, KVH, D)
 
     def _scatter_chunk(pool, local_pages, seq_kv, positions, n_act):
-        # pool: (nb, 1, bps+1, page, KVH, D); local_pages: (1, npg_loc);
-        # seq_kv: (nb, L, KVH, D) replicated; positions: (L,) replicated;
+        # pool: (nb, 1, bps+1, page, KVH/tp, D); local_pages: (1, npg_loc);
+        # seq_kv: (nb, L, KVH/tp, D) — the in-spec slices the chunk's KV
+        # heads to this device's slice; positions: (L,) replicated;
         # n_act: replicated scalar — the ACTIVE stripe width (<= mesh
         # axis size; traced so stripe resizes never recompile)
         pl_, lp = pool[:, 0], local_pages[0]
@@ -370,7 +382,7 @@ def _sharded_page_ops(mesh, axis: str):
     rep = P()
     return {
         "scatter_chunk": sm(
-            _scatter_chunk, (pool_spec, ids_spec, rep, rep, rep),
+            _scatter_chunk, (pool_spec, ids_spec, kv_spec, rep, rep),
             pool_spec, donate=(0,)),
         "restripe_blocks": sm(
             _restripe_blocks, (pool_spec, ids_spec, ids_spec), pool_spec,
@@ -379,10 +391,10 @@ def _sharded_page_ops(mesh, axis: str):
             _copy_blocks, (pool_spec, pool_spec, ids_spec, ids_spec),
             pool_spec, donate=(0,)),
         "scatter_blocks": sm(
-            _scatter_blocks, (pool_spec, ids_spec, P(None, axis)),
+            _scatter_blocks, (pool_spec, ids_spec, pages_spec),
             pool_spec, donate=(0,)),
         "gather_blocks": sm(
-            _gather_blocks, (pool_spec, ids_spec), P(None, axis)),
+            _gather_blocks, (pool_spec, ids_spec), pages_spec),
         "copy_within": sm(
             _copy_within, (pool_spec, ids_spec, ids_spec), pool_spec,
             donate=(0,)),
@@ -390,69 +402,85 @@ def _sharded_page_ops(mesh, axis: str):
 
 
 def shard_scatter_kv_chunk(pool, local_pages, seq_kv, positions, *,
-                           mesh, axis: str, active: Optional[int] = None):
+                           mesh, axis: str, active: Optional[int] = None,
+                           head_axis: Optional[str] = None):
     """Sharded ``scatter_kv_chunk``: the chunk's tokens are visible on
-    every shard (replicated in-spec); each shard writes only the tokens
-    whose logical page it owns (page ``p`` belongs to shard ``p %
-    active``), routing the rest to its scratch page.  ``active`` (default
-    all shards) is the live stripe width — shards past it idle.  The pool
-    argument is donated."""
+    every shard (the in-spec replicates over the stripe axis and, with
+    ``head_axis``, slices the KV heads to the device's slice); each shard
+    writes only the tokens whose logical page it owns (page ``p`` belongs
+    to shard ``p % active``), routing the rest to its scratch page.
+    ``active`` (default all shards) is the live stripe width — shards past
+    it idle.  The pool argument is donated."""
     n_act = jnp.int32(active or mesh.shape[axis])
-    return _sharded_page_ops(mesh, axis)["scatter_chunk"](
+    return _sharded_page_ops(mesh, axis, head_axis)["scatter_chunk"](
         pool, local_pages, seq_kv, positions, n_act)
 
 
 def shard_restripe_kv_blocks(pool, send_local, recv_local, *, mesh,
-                             axis: str):
+                             axis: str, head_axis: Optional[str] = None):
     """Cross-shard page migration for a live stripe resize — the ONE
     operation that moves pages between shards.  ``send_local`` is an
     (N, N, m) grid: row s holds, per destination d, the local page ids
     shard s must send to d (scratch-padded to m); ``recv_local[d, s]``
     the destination local ids on d for shard s's payload, slot-aligned
     with ``send_local[s, d]``.  One ``all_to_all`` exchanges every
-    payload; each shard then scatters what it received.  The pool
-    argument is donated."""
-    return _sharded_page_ops(mesh, axis)["restripe_blocks"](
+    payload; each shard then scatters what it received.  Head-sharded
+    pools migrate only the local head slice — the all_to_all stays within
+    each TP row.  The pool argument is donated."""
+    return _sharded_page_ops(mesh, axis, head_axis)["restripe_blocks"](
         pool, send_local, recv_local)
 
 
 def shard_copy_kv_blocks(dst_pool, src_pool, src_local, dst_local, *,
-                         mesh, axis: str):
+                         mesh, axis: str, head_axis: Optional[str] = None):
     """Sharded ``copy_kv_blocks``: per-shard (m,) local id lists, aligned
     pairs guaranteed same-shard by stripe alignment — a purely
     device-local page copy (admission handoff between sharded pools).
     The destination pool is donated."""
-    return _sharded_page_ops(mesh, axis)["copy_blocks"](
+    return _sharded_page_ops(mesh, axis, head_axis)["copy_blocks"](
         dst_pool, src_pool, src_local, dst_local)
 
 
-def shard_scatter_kv_blocks(pool, dst_local, pages, *, mesh, axis: str):
+def shard_scatter_kv_blocks(pool, dst_local, pages, *, mesh, axis: str,
+                            head_axis: Optional[str] = None):
     """Sharded ``scatter_kv_blocks``: ``pages`` is (nb, n_shards, m, page,
     KVH, D) grouped per destination shard (host swap-in / promotion
-    payloads, or re-grouped pages from an unsharded pool).  The pool
-    argument is donated."""
-    return _sharded_page_ops(mesh, axis)["scatter_blocks"](
+    payloads, or re-grouped pages from an unsharded pool).  Payloads stay
+    full KV-head width host-side; with ``head_axis`` the in-spec slices
+    each device's KVH / tp share during the upload.  The pool argument is
+    donated."""
+    return _sharded_page_ops(mesh, axis, head_axis)["scatter_blocks"](
         pool, dst_local, pages)
 
 
-def shard_gather_kv_blocks(pool, local, *, mesh, axis: str):
+def shard_gather_kv_blocks(pool, local, *, mesh, axis: str,
+                           head_axis: Optional[str] = None):
     """Sharded ``gather_kv_blocks``: each shard reads its own pages;
     result is (nb, n_shards, m, page, KVH, D) in per-shard grouping order
-    (the caller reassembles logical order host-side)."""
-    return _sharded_page_ops(mesh, axis)["gather_blocks"](pool, local)
+    (the caller reassembles logical order host-side).  The out-spec keeps
+    the head axis sharded, so a head-sharded pool's gather reassembles the
+    full KVH width only when the result is pulled to host."""
+    return _sharded_page_ops(mesh, axis, head_axis)["gather_blocks"](
+        pool, local)
 
 
 def shard_copy_kv_block_within(pool, src_local, dst_local, *, mesh,
-                               axis: str):
+                               axis: str, head_axis: Optional[str] = None):
     """Sharded ``copy_kv_block_within``: per-shard (scalar) local ids —
     the owning shard copies the CoW page, every other shard copies scratch
     onto scratch.  The pool argument is donated."""
-    return _sharded_page_ops(mesh, axis)["copy_within"](
+    return _sharded_page_ops(mesh, axis, head_axis)["copy_within"](
         pool, src_local, dst_local)
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         lse_ref, acc_scr, m_scr, l_scr,
+# Position base for table columns past a sequence's allocation (scratch
+# columns of a striped shard-local table): far past any real length, and
+# small enough that base + slot never overflows int32.
+POS_PAD = jnp.int32(2 ** 30)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, pp_ref, q_ref, k_ref, v_ref,
+                         o_ref, lse_ref, acc_scr, m_scr, l_scr,
                          *, scale: float, nk: int, bk: int, group: int,
                          window: Optional[int]):
     b = pl.program_id(0)
@@ -465,9 +493,13 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
 
     length = len_ref[b]
-    # logical position: pages appear in table order, so position is just
-    # the flat index — the physical indirection happened in the index map
-    kv_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+    # logical position of each slot: the prefetched page_pos gives the
+    # page's first-token position (flat table order by default; the global
+    # stripe positions for a shard-local table) — the physical indirection
+    # happened in the index map, the *logical* one happens here, so window
+    # masks are native however the pages are striped
+    kv_pos = pp_ref[b, ik] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bk), 1)[0]
     valid = kv_pos < length
     if window is not None:
         valid &= kv_pos >= (length - window)
@@ -519,31 +551,43 @@ def paged_flash_decode(
     softmax_scale: Optional[float] = None,
     interpret: bool = False,
     with_lse: bool = False,
+    page_pos: Optional[jax.Array] = None,  # (B, pages_per_seq) int32
 ) -> jax.Array | Tuple[jax.Array, jax.Array]:
     """Flash decode straight off the paged pool: the block table is a
     scalar-prefetch argument and the KV BlockSpec index map dereferences it,
-    so each (b, ik) grid step DMAs physical page ``block_tables[b, ik]``."""
+    so each (b, ik) grid step DMAs physical page ``block_tables[b, ik]``.
+
+    ``page_pos[b, j]`` is the logical position of page j's first token
+    (default: flat table order, ``j * page``).  A shard of a striped pool
+    passes its pages' *global* stripe positions instead, which makes both
+    the length mask and the sliding-window mask native in the kernel — no
+    positional gather slab, no contiguous-local-length requirement.
+    Columns past the allocation should carry ``POS_PAD`` so they mask out.
+    """
     B, H, D = q.shape
     _, bk, KVH, _ = k_pool.shape
     nk = block_tables.shape[1]
     group = H // KVH
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    if page_pos is None:
+        page_pos = jnp.broadcast_to(
+            jnp.arange(nk, dtype=jnp.int32)[None] * bk, (B, nk))
 
     kernel = functools.partial(_paged_decode_kernel, scale=scale, nk=nk,
                                bk=bk, group=group, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,         # block_tables, lengths
+        num_scalar_prefetch=3,         # block_tables, lengths, page_pos
         grid=(B, nk),
         in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln, pp: (b, 0, 0)),
             pl.BlockSpec((1, bk, KVH, D),
-                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+                         lambda b, ik, bt, ln, pp: (bt[b, ik], 0, 0, 0)),
             pl.BlockSpec((1, bk, KVH, D),
-                         lambda b, ik, bt, ln: (bt[b, ik], 0, 0, 0)),
+                         lambda b, ik, bt, ln, pp: (bt[b, ik], 0, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, H), lambda b, ik, bt, ln: (b, 0)),
+            pl.BlockSpec((1, H, D), lambda b, ik, bt, ln, pp: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, ik, bt, ln, pp: (b, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((H, D), jnp.float32),
@@ -559,7 +603,70 @@ def paged_flash_decode(
             jax.ShapeDtypeStruct((B, H), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, lengths, q, k_pool, v_pool)
+    )(block_tables, lengths, page_pos, q, k_pool, v_pool)
     if with_lse:
         return out, lse
     return out
+
+
+def fused_append_attend(k_pool, v_pool, append_page, append_slot,
+                        k_new, v_new):
+    """The append half of the fused decode tick: write each sequence's new
+    token K/V into its page slot.  Rows routed to the scratch page (padded
+    batch rows; non-owning shards of a striped pool) write garbage that is
+    never read.  Shared by ``paged_append_attend`` and the sharded decode
+    island — one invocation writes AND attends, so the pool is touched
+    once per tick instead of scatter-then-gather."""
+    k_pool = k_pool.at[append_page, append_slot].set(
+        k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[append_page, append_slot].set(
+        v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(1, 2),
+    static_argnames=("window", "softmax_scale", "with_lse", "impl"))
+def paged_append_attend(
+    q: jax.Array,                      # (B, H, D)
+    k_pool: jax.Array,                 # (n_pages, page, KVH, D) — donated
+    v_pool: jax.Array,                 # donated
+    block_tables: jax.Array,           # (B, pages_per_seq) int32
+    lengths: jax.Array,                # (B,) int32, EXCLUDING the new token
+    append_page: jax.Array,            # (B,) int32 physical page ids
+    append_slot: jax.Array,            # (B,) int32 slots within the page
+    k_new: jax.Array,                  # (B, KVH, D)
+    v_new: jax.Array,
+    page_pos: Optional[jax.Array] = None,
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    with_lse: bool = False,
+    impl: str = "pallas",
+):
+    """Fused append+attend decode tick: scatter the new token's K/V into
+    its page and attend over ``lengths + 1`` tokens in ONE donated jitted
+    invocation.  The pools are donated, so XLA performs the append as an
+    in-place dynamic-update on the live buffers and the attention reads
+    the updated pool directly — each tick stops paying a separate scatter
+    dispatch followed by a gather over the same page.
+
+    Returns ``(o[, lse], k_pool, v_pool)``.
+    """
+    from repro.kernels import ref as _ref
+    k_pool, v_pool = fused_append_attend(k_pool, v_pool, append_page,
+                                         append_slot, k_new, v_new)
+    att = lengths + 1
+    if impl == "ref":
+        o = _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, block_tables, att, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse,
+            page_pos=page_pos)
+    else:
+        o = paged_flash_decode(
+            q, k_pool, v_pool, block_tables, att, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse,
+            interpret=(impl == "interpret"), page_pos=page_pos)
+    if with_lse:
+        return o[0], o[1], k_pool, v_pool
+    return o, k_pool, v_pool

@@ -19,6 +19,7 @@ from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_attention import (
     paged_flash_prefill as _paged_flash_prefill)
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import paged_append_attend as _paged_append_attend
 from repro.kernels.flash_decode import paged_flash_decode as _paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
@@ -66,13 +67,27 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
 
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                            window: Optional[int] = None, softmax_scale=None,
-                           with_lse: bool = False, impl: Optional[str] = None):
+                           with_lse: bool = False, impl: Optional[str] = None,
+                           page_pos=None, k_new=None, v_new=None,
+                           append_page=None, append_slot=None):
     """Block-table decode attention: one query token per sequence against a
     paged KV pool, no dense ``(batch, max_seq)`` cache anywhere.
 
     q: (B, H, D); k_pool/v_pool: (n_pages, page, KVH, D);
     block_tables: (B, pages_per_seq) int32 physical page ids (pad dead rows
     with a scratch page); lengths: (B,) valid cache length per sequence.
+
+    ``page_pos`` (B, pages_per_seq) optionally gives each table column's
+    first-token logical position — a shard of a striped pool passes its
+    pages' *global* stripe positions, making the length and sliding-window
+    masks native however the pages are distributed (no positional gather
+    slab).
+
+    Fused append+attend: pass ``k_new``/``v_new`` (B, KVH, D) with
+    ``append_page``/``append_slot`` (B,) and the new token's K/V is written
+    into its page inside the same (donated) invocation that attends —
+    ``lengths`` then EXCLUDES the new token and the return value becomes
+    ``(o[, lse], k_pool, v_pool)``; the pools are donated, so rebind them.
 
     On TPU (``impl="pallas"``) this is ``paged_flash_decode`` — the block
     table rides in as a scalar-prefetch argument and the kernel DMAs pages
@@ -86,9 +101,17 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     is served by the logical-order gather oracle regardless of ``impl``:
     the distributed execution path for that layout is the shard_map
     split-KV island (core/ring_attention.sharded_paged_decode), whose
-    per-shard partials dispatch back here with the unsharded layout.
+    per-shard partials dispatch back here with the shard-local 2-dim
+    layout + ``page_pos``.
     """
     impl = impl or default_impl()
+    if k_new is not None:
+        assert block_tables.ndim == 2, "fused append needs 2-dim tables"
+        return _paged_append_attend(
+            q, k_pool, v_pool, block_tables, lengths, append_page,
+            append_slot, k_new, v_new, page_pos, window=window,
+            softmax_scale=softmax_scale, with_lse=with_lse,
+            impl=("ref" if impl in ("ref", "ref_blocked") else impl))
     if block_tables.ndim == 3:
         return _ref.paged_decode_attention_ref(
             q, k_pool, v_pool, block_tables, lengths, window=window,
@@ -96,10 +119,11 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     if impl in ("ref", "ref_blocked"):
         return _ref.paged_decode_attention_ref(
             q, k_pool, v_pool, block_tables, lengths, window=window,
-            softmax_scale=softmax_scale, with_lse=with_lse)
+            softmax_scale=softmax_scale, with_lse=with_lse,
+            page_pos=page_pos)
     return _paged_flash_decode(q, k_pool, v_pool, block_tables, lengths,
                                window=window, softmax_scale=softmax_scale,
-                               with_lse=with_lse,
+                               with_lse=with_lse, page_pos=page_pos,
                                interpret=(impl == "interpret"))
 
 

@@ -194,6 +194,7 @@ def paged_decode_attention_ref(
     window: Optional[int] = None,
     softmax_scale: Optional[float] = None,
     with_lse: bool = False,
+    page_pos: Optional[jax.Array] = None,  # (B, pages_per_seq) int32
 ):
     """Single-token decode attention straight off a paged KV pool.
 
@@ -205,6 +206,12 @@ def paged_decode_attention_ref(
     ``ops.paged_decode_attention``; on TPU the scalar-prefetch kernel
     ``flash_decode.paged_flash_decode`` skips the materialisation entirely.
 
+    ``page_pos`` (2-dim tables only) gives each table column's first-token
+    logical position — a shard of a striped pool passes its pages' global
+    stripe positions, so length AND window masks apply natively to the
+    shard-local view (the per-shard paged decode path; matches the
+    kernel's scalar-prefetch argument of the same name).
+
     Also accepts the sequence-parallel sharded layout (3-dim
     ``block_tables`` (n_shards, B, npg_local) + 5-dim pools): the striped
     pages are gathered back into logical order first — the single-process
@@ -212,6 +219,7 @@ def paged_decode_attention_ref(
     (core/ring_attention.sharded_paged_decode) is validated against.
     """
     if block_tables.ndim == 3:
+        assert page_pos is None, "page_pos applies to shard-local tables"
         k = sharded_pool_view(k_pool, block_tables)
         v = sharded_pool_view(v_pool, block_tables)
     else:
@@ -219,6 +227,22 @@ def paged_decode_attention_ref(
         page = k_pool.shape[1]
         k = k_pool[block_tables].reshape(B, npg * page, *k_pool.shape[2:])
         v = v_pool[block_tables].reshape(B, npg * page, *v_pool.shape[2:])
+        if page_pos is not None:
+            kv_pos = (page_pos[:, :, None] +
+                      jnp.arange(page, dtype=jnp.int32)[None, None]
+                      ).reshape(B, npg * page)
+            kv_valid = kv_pos < lengths[:, None]
+            if window is not None:
+                kv_valid &= kv_pos >= (lengths[:, None] - window)
+            res = attention_ref(
+                q[:, None], k, v,
+                q_pos=lengths[:, None] - 1 + jnp.zeros((B, 1), jnp.int32),
+                kv_pos=kv_pos, causal=False, kv_valid=kv_valid,
+                softmax_scale=softmax_scale, with_lse=with_lse)
+            if with_lse:
+                out, lse = res
+                return out[:, 0], lse[:, :, 0]
+            return res[:, 0]
     return decode_attention_ref(q, k, v, lengths, window=window,
                                 softmax_scale=softmax_scale,
                                 with_lse=with_lse)

@@ -70,14 +70,20 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
       * paged — {"k","v","block_table"} where k/v are physical pools
         (n_pages, page, KVH, D) and block_table is (B, pages_per_seq)
         int32 page ids (the serving engine's BlockManager layout).  The
-        new token's K/V is scattered into its page and attention runs
-        straight off the pool (Pallas scalar-prefetch kernel on TPU,
-        gather fallback elsewhere) — no dense (B, max_seq) view exists.
+        decode tick is FUSED: one donated ``ops.paged_decode_attention``
+        invocation writes the new token's K/V into its page slot AND
+        attends off the pool (Pallas scalar-prefetch kernel on TPU,
+        gather fallback elsewhere) — no dense (B, max_seq) view, no
+        scatter-then-gather over the same page.
         A *sharded* paged cache — pools (n_shards, blocks_per_shard + 1,
         page, KVH, D) split over ctx.kv_split_axis, block_table
         (n_shards, B, npg_local) per-shard local ids — runs as a split-KV
         shard_map island (per-shard partial softmax over device-local
-        pages + LSE merge; core/ring_attention.sharded_paged_decode).
+        pages with native stripe-position length/window masks + LSE
+        merge; core/ring_attention.sharded_paged_decode).  When KVH
+        divides ctx.tp_axis the pool is additionally HEAD-SHARDED (the
+        TP×SP layout, ExecContext.pool_head_axis): each device stores
+        only its KVH/tp slice and the island consumes it directly.
     history (CDSP chunked prefill), two layouts:
       * dense — {"k","v","pos"}: previous chunks' KV, already re-balanced
         (evenly re-sharded) over the current chunk's group; position-array
@@ -99,22 +105,28 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
     pos2d = positions[0] if positions.ndim == 3 else positions
 
     if mode == "decode" and cache is not None and "block_table" in cache:
-        # native block-table paged decode: append this token's K/V into its
-        # physical page, then attend over the pool through the table.  Rows
-        # whose table points at the scratch page (inactive batch slots)
-        # write and read garbage that no caller consumes.
+        # native block-table paged decode: one fused invocation appends
+        # this token's K/V into its physical page AND attends over the
+        # pool through the table.  Rows whose table points at the scratch
+        # page (inactive batch slots) write and read garbage that no
+        # caller consumes.
         assert cache_len is not None
         qd = q[:, 0]                                         # (B, H, D)
         if cache["block_table"].ndim == 3:
             # sharded pool layout: split-KV paged decode island — the
-            # append lands on the shard owning the target page, each shard
-            # attends its own pages, partials merge by LSE
+            # append lands on the shard owning the target page (fused with
+            # the attend), each shard attends its own pages, partials
+            # merge by LSE.  kv_ax marks the pool head-sharded over TP
+            # (same rule as PagedKVCache construction via
+            # ExecContext.pool_head_axis).
             assert ctx.kv_split_axis is not None and ctx.mesh is not None, \
                 "a sharded paged cache needs ctx.kv_split_axis and a mesh"
             o, k_pool, v_pool = sharded_paged_decode(
                 qd, cache["k"], cache["v"], cache["block_table"], cache_len,
                 mesh=ctx.mesh, split_axis=ctx.kv_split_axis,
-                batch_axis=ctx.batch_axes, window=window,
+                batch_axis=ctx.batch_axes,
+                head_axis=kv_ax if h_ax is not None else None,
+                window=window,
                 impl=ctx.impl, k_new=k[:, 0], v_new=v[:, 0],
                 active_shards=ctx.active_pool_shards)
             out = out_proj(o[:, None], p, prefix)
@@ -137,16 +149,14 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
                 "sharded layout or run with ctx.with_(kv_split_axis"
                 "=None).")
         bt = cache["block_table"]                            # (B, npg) int32
-        k_pool, v_pool = cache["k"], cache["v"]
-        page = k_pool.shape[1]
+        page = cache["k"].shape[1]
         bidx = jnp.arange(B)
-        phys = bt[bidx, cache_len // page]                   # (B,)
-        slot = cache_len % page
-        k_pool = k_pool.at[phys, slot].set(k[:, 0].astype(k_pool.dtype))
-        v_pool = v_pool.at[phys, slot].set(v[:, 0].astype(v_pool.dtype))
-        o = ops.paged_decode_attention(qd, k_pool, v_pool, bt,
-                                       cache_len + 1, window=window,
-                                       impl=ctx.impl)
+        # fused append+attend: the pools are donated — rebind them
+        o, k_pool, v_pool = ops.paged_decode_attention(
+            qd, cache["k"], cache["v"], bt, cache_len, window=window,
+            impl=ctx.impl, k_new=k[:, 0], v_new=v[:, 0],
+            append_page=bt[bidx, cache_len // page],
+            append_slot=cache_len % page)
         out = out_proj(o[:, None], p, prefix)
         return out, {"k": k_pool, "v": v_pool, "block_table": bt}
 
@@ -267,6 +277,7 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
                 q, k, v, pos2d, pos2d, history["k_pool"],
                 history["v_pool"], history["block_table"], history["len"],
                 mesh=ctx.mesh, sp_axis=ctx.sp_axis, head_axis=h_ax,
+                kv_head_axis=kv_ax if h_ax is not None else None,
                 batch_axis=ctx.pod_axis, causal=causal,
                 window=window, impl=ctx.impl,
                 active_shards=ctx.active_pool_shards)

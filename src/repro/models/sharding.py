@@ -104,6 +104,19 @@ class ExecContext:
             return None
         return ax
 
+    def pool_head_axis(self, n_kv_heads: int) -> Optional[str]:
+        """Mesh axis a paged KV pool's head (KVH) dim is sharded over, or
+        None for a replicated full-width pool.
+
+        Head sharding rides ``tp_axis`` ON TOP of the SP stripe (the
+        TP×SP layout): each device stores only its ``KVH / tp`` slice, so
+        per-device pool bytes drop exactly tp-fold.  Only applies when
+        ``n_kv_heads`` divides the axis — GQA configs with n_kv < tp keep
+        the replicated pool and the islands' per-call head slicing.  The
+        same rule gates the attention islands' head specs
+        (models/attention.py), so construction and consumption agree."""
+        return self.shardable(n_kv_heads, self.tp_axis)
+
     def pool_shards(self, role: str) -> int:
         """PHYSICAL shard count for a paged pool of the given role
         (1 = unsharded).  Immutable for a pool's lifetime — elastic

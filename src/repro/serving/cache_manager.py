@@ -62,6 +62,15 @@ device-local (kernels/flash_decode.py sharded helpers).  Each shard
 carries its own scratch page (local id ``blocks_per_shard``); the global
 scratch id stays ``total_blocks``.
 
+**Head-sharded pools** (``head_axis``, the TP×SP layout): on top of the
+SP stripe the KVH dim is sharded over the TP mesh axis whenever it
+divides — each device stores only ``KVH / kv_head_shards`` heads of
+every page it owns, so per-device KV bytes drop exactly tp-fold for GQA
+configs.  Purely a placement change: global shapes, block ids and the
+stripe invariant are untouched; shard_map in/out specs carry the head
+axis so chunk payloads are sliced at scatter and gathers reassemble
+full-width pages for the host tier.
+
 **Elastic striping** (``active_shards <= kv_shards``): the physical pool
 layout is immutable, but the *stripe* — how many shards new pages spread
 over — can shrink and grow at runtime.  ``BlockManager.restripe(n)``
@@ -172,6 +181,14 @@ class BlockManager:
     total_blocks: int
     block_size: int = 256
     kv_shards: int = 1
+    # layout bookkeeping only: how many TP devices each page's KVH width
+    # is sliced over (PagedKVCache head sharding).  Block ids, striping
+    # and refcounts are head-agnostic — a page is one logical unit
+    # whichever way its head slices are placed — so this never enters
+    # allocation math; it exists so capacity accounting (per-device page
+    # bytes = page_bytes / kv_head_shards) and swap staging agree with
+    # the physical pool.
+    kv_head_shards: int = 1
     allocs: Dict[int, List[int]] = field(default_factory=dict)
     virtual_tokens: Dict[int, int] = field(default_factory=dict)
     virtual_offset: Dict[int, int] = field(default_factory=dict)
@@ -589,11 +606,21 @@ class PagedKVCache:
     (kernels/flash_decode.py ``shard_*`` helpers).  Block ids handed in
     are still the BlockManager's *global* striped ids; this class converts
     them to (shard, local) internally.
+
+    ``head_axis`` (TP, honoured when KVH divides the axis) additionally
+    shards the KVH dim over a second mesh axis — the TP×SP layout: each
+    device stores only its ``KVH / kv_head_shards`` head slice, cutting
+    per-device pool bytes exactly ``kv_head_shards``-fold.  The logical
+    (global) pool shape and every block id are unchanged; only the
+    placement narrows, and the ``shard_*`` helpers slice payloads /
+    reassemble gathers by spec, so the host tier and all callers keep
+    seeing full-width pages.
     """
 
     def __init__(self, cfg, total_blocks: int, block_size: int,
                  dtype: Optional[str] = None, kv_shards: int = 1,
-                 mesh=None, shard_axis: Optional[str] = None):
+                 mesh=None, shard_axis: Optional[str] = None,
+                 head_axis: Optional[str] = None):
         import jax
         import jax.numpy as jnp
         self.cfg = cfg
@@ -602,6 +629,8 @@ class PagedKVCache:
         self.kv_shards = kv_shards
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.head_axis = None
+        self.kv_head_shards = 1
         self.scratch_block = total_blocks       # global scratch id
         self.attn_layers = [i for i, s in enumerate(cfg.pattern)
                             if s.mixer == "attn"]
@@ -616,11 +645,16 @@ class PagedKVCache:
                 "a sharded pool needs a mesh and an axis to shard over"
             assert total_blocks % kv_shards == 0, (total_blocks, kv_shards)
             self.blocks_per_shard = total_blocks // kv_shards
+            if (head_axis is not None and mesh.shape[head_axis] > 1
+                    and kvh % mesh.shape[head_axis] == 0):
+                self.head_axis = head_axis
+                self.kv_head_shards = mesh.shape[head_axis]
             # one scratch page PER SHARD (local id blocks_per_shard)
             shape = (nb, kv_shards, self.blocks_per_shard + 1,
                      block_size, kvh, dh)
             from jax.sharding import NamedSharding, PartitionSpec as P
-            sh = NamedSharding(mesh, P(None, shard_axis))
+            sh = NamedSharding(
+                mesh, P(None, shard_axis, None, None, self.head_axis))
             make = lambda: jax.device_put(jnp.zeros(shape, dt), sh)
         self.pools = {str(i): {"k": make(), "v": make()}
                       for i in self.attn_layers}
@@ -685,10 +719,12 @@ class PagedKVCache:
                 ent = new_caches[str(i)]["self"]
                 self.pools[str(i)]["k"] = shard_scatter_kv_chunk(
                     self.pools[str(i)]["k"], lp, ent["k"][:, 0], pos,
-                    mesh=self.mesh, axis=self.shard_axis, active=act)
+                    mesh=self.mesh, axis=self.shard_axis, active=act,
+                    head_axis=self.head_axis)
                 self.pools[str(i)]["v"] = shard_scatter_kv_chunk(
                     self.pools[str(i)]["v"], lp, ent["v"][:, 0], pos,
-                    mesh=self.mesh, axis=self.shard_axis, active=act)
+                    mesh=self.mesh, axis=self.shard_axis, active=act,
+                    head_axis=self.head_axis)
             return
         blk = jnp.asarray(blocks, jnp.int32)
         for i in self.attn_layers:
@@ -745,7 +781,8 @@ class PagedKVCache:
                 for part in ("k", "v"):
                     g = shard_gather_kv_blocks(
                         src.pools[str(i)][part], lids,
-                        mesh=src.mesh, axis=src.shard_axis)
+                        mesh=src.mesh, axis=src.shard_axis,
+                        head_axis=getattr(src, "head_axis", None))
                     pages = g.reshape((g.shape[0], -1) + g.shape[3:])[:, fidx]
                     self.pools[str(i)][part] = scatter_kv_blocks(
                         self.pools[str(i)][part], dst_ids, pages)
@@ -794,7 +831,8 @@ class PagedKVCache:
                 for part in ("k", "v"):
                     self.pools[str(i)][part] = shard_copy_kv_blocks(
                         self.pools[str(i)][part], src.pools[str(i)][part],
-                        src_local, dl, mesh=self.mesh, axis=self.shard_axis)
+                        src_local, dl, mesh=self.mesh, axis=self.shard_axis,
+                        head_axis=self.head_axis)
             return
         # host numpy / unsharded device source: build per-shard page
         # payloads (nb, n, m_max, page, KVH, D) in dst grouping order
@@ -821,7 +859,8 @@ class PagedKVCache:
                     #                                  local scratch: harmless
                 self.pools[str(i)][part] = shard_scatter_kv_blocks(
                     self.pools[str(i)][part], dl, pages,
-                    mesh=self.mesh, axis=self.shard_axis)
+                    mesh=self.mesh, axis=self.shard_axis,
+                    head_axis=self.head_axis)
 
     def read_blocks(self, blocks: Iterable[int]) -> Dict[str, dict]:
         """Gather whole pages into host (numpy) arrays — the staging read
@@ -843,7 +882,8 @@ class PagedKVCache:
                 for part in ("k", "v"):
                     g = np.asarray(shard_gather_kv_blocks(
                         self.pools[str(i)][part], lids,
-                        mesh=self.mesh, axis=self.shard_axis))
+                        mesh=self.mesh, axis=self.shard_axis,
+                        head_axis=self.head_axis))
                     pages = np.empty((g.shape[0], len(ids_list))
                                      + g.shape[3:], g.dtype)
                     for s in range(self.kv_shards):
@@ -879,7 +919,8 @@ class PagedKVCache:
                 for part in ("k", "v"):
                     self.pools[str(i)][part] = shard_copy_kv_block_within(
                         self.pools[str(i)][part], src, dst,
-                        mesh=self.mesh, axis=self.shard_axis)
+                        mesh=self.mesh, axis=self.shard_axis,
+                        head_axis=self.head_axis)
             return
         s = jnp.asarray(src_block, jnp.int32)
         d = jnp.asarray(dst_block, jnp.int32)
@@ -928,7 +969,8 @@ class PagedKVCache:
             for part in ("k", "v"):
                 self.pools[str(i)][part] = shard_restripe_kv_blocks(
                     self.pools[str(i)][part], snd, rcv,
-                    mesh=self.mesh, axis=self.shard_axis)
+                    mesh=self.mesh, axis=self.shard_axis,
+                    head_axis=self.head_axis)
 
     # -------------------------------------------------------------- decode
     def adopt(self, new_caches: dict) -> None:

@@ -155,13 +155,19 @@ class PagedDecodeState:
         self.kv_shards = ctx.pool_shards("decode")
         total_blocks = max_batch * max_seq // block_size
         total_blocks = -(-total_blocks // self.kv_shards) * self.kv_shards
-        self.blocks = BlockManager(total_blocks=total_blocks,
-                                   block_size=block_size,
-                                   kv_shards=self.kv_shards)
+        # TP head sharding on top of the stripe (TP×SP): each device holds
+        # only its KVH/tp head slice of the pages it owns
+        head_axis = (ctx.pool_head_axis(cfg.n_kv_heads)
+                     if self.kv_shards > 1 else None)
         self.kv = PagedKVCache(cfg, total_blocks, block_size,
                                dtype=cfg.dtype, kv_shards=self.kv_shards,
                                mesh=ctx.mesh if self.kv_shards > 1 else None,
-                               shard_axis=ctx.pool_axis("decode"))
+                               shard_axis=ctx.pool_axis("decode"),
+                               head_axis=head_axis)
+        self.blocks = BlockManager(total_blocks=total_blocks,
+                                   block_size=block_size,
+                                   kv_shards=self.kv_shards,
+                                   kv_head_shards=self.kv.kv_head_shards)
         self.slots: List[Optional[int]] = [None] * max_batch   # row -> rid
         self.meta: Dict[int, _DecodeMeta] = {}
         self.aux: Dict[int, dict] = {}     # rid -> non-attn cache tree (B=1)
@@ -443,12 +449,15 @@ class ServingEngine(Simulator):
             prefill_pool_blocks = max(
                 1, spec.n_prefill * max_seq // block_size)
         prefill_pool_blocks = -(-prefill_pool_blocks // n_sp) * n_sp
-        self.pblocks = BlockManager(total_blocks=prefill_pool_blocks,
-                                    block_size=block_size, kv_shards=n_sp)
         self.pkv = PagedKVCache(cfg, prefill_pool_blocks, block_size,
                                 dtype=cfg.dtype, kv_shards=n_sp,
                                 mesh=ctx.mesh if n_sp > 1 else None,
-                                shard_axis=ctx.pool_axis("prefill"))
+                                shard_axis=ctx.pool_axis("prefill"),
+                                head_axis=(ctx.pool_head_axis(cfg.n_kv_heads)
+                                           if n_sp > 1 else None))
+        self.pblocks = BlockManager(total_blocks=prefill_pool_blocks,
+                                    block_size=block_size, kv_shards=n_sp,
+                                    kv_head_shards=self.pkv.kv_head_shards)
         # host offload tier: numpy mirror pool shared by swap records and
         # the LRU second-tier prefix cache; demotions hook BlockManager
         # releases per decode instance

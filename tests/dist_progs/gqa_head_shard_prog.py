@@ -1,0 +1,100 @@
+"""Subprocess: GQA head-sharding on an 8-device (2 sp x 4 tp) mesh.
+
+Covers the two head layouts of a llama3_8b-style GQA model at TP=4:
+
+* KVH % tp == 0 (llama3_8b: KVH=8, tp=4 — here KVH=4 for size): the pool
+  is HEAD-SHARDED (ExecContext.pool_head_axis returns the tp axis) and
+  the islands consume each device's KVH/tp slice directly; per-device
+  pool bytes drop exactly tp-fold.
+* n_kv < tp (KVH=2 at tp=4): head sharding is refused (pool_head_axis
+  None), the pool stays replicated over tp and the ring-prefill body
+  slices the kv-head range per call (the legacy GQA path).
+
+Both are validated against the single-device dense oracle."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.ring_attention import ring_paged_prefill, sharded_paged_decode
+from repro.kernels.ref import (attention_ref, decode_attention_ref,
+                               sharded_pool_view)
+from repro.models.sharding import ExecContext
+from stripe_util import stripe_pool
+
+assert jax.device_count() == 8, jax.device_count()
+rng = np.random.default_rng(0)
+
+B, H, D, page = 2, 8, 16, 8
+npg = 4
+S = npg * page
+n_sp, tp = 2, 4
+mesh = Mesh(np.array(jax.devices()).reshape(n_sp, tp), ("sp", "tp"))
+ctx = ExecContext(mesh=mesh, sp_axis="sp", tp_axis="tp",
+                  kv_split_axis="sp")
+assert ctx.pool_head_axis(4) == "tp"     # llama3_8b-ratio GQA: shardable
+assert ctx.pool_head_axis(2) is None     # n_kv < tp: replicated fallback
+
+for KVH in (4, 2):
+    kv_ax = ctx.pool_head_axis(KVH)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    kp, vp, tables = stripe_pool(np.random.default_rng(KVH), n_sp, k, v,
+                                 page)
+    sh = NamedSharding(mesh, P("sp", None, None, kv_ax))
+    kp = jax.device_put(jnp.asarray(kp), sh)
+    vp = jax.device_put(jnp.asarray(vp), sh)
+    bt = jnp.asarray(tables)
+    denom = n_sp * (tp if kv_ax else 1)
+    assert (kp.addressable_shards[0].data.nbytes * denom == kp.nbytes), \
+        (KVH, "per-device pool bytes must be full/(sp*tp) iff head-sharded")
+
+    # --- fused sharded decode (+ window) vs dense oracle --------------
+    lengths = jnp.asarray([13, 29], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k_new = jnp.asarray(rng.standard_normal((B, KVH, D)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((B, KVH, D)), jnp.float32)
+    o, kp2, vp2 = sharded_paged_decode(
+        q, kp, vp, bt, lengths, mesh=mesh, split_axis="sp",
+        head_axis=kv_ax, k_new=k_new, v_new=v_new)
+    bidx = jnp.arange(B)
+    k_ref = k.at[bidx, lengths].set(k_new)
+    v_ref = v.at[bidx, lengths].set(v_new)
+    want = decode_attention_ref(q, k_ref, v_ref, lengths + 1)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sharded_pool_view(kp2, bt)),
+                               np.asarray(k_ref), atol=0)
+
+    o_w = sharded_paged_decode(q, kp2, vp2, bt, lengths + 1, mesh=mesh,
+                               split_axis="sp", head_axis=kv_ax, window=11)
+    want_w = decode_attention_ref(q, k_ref, v_ref, lengths + 1, window=11)
+    np.testing.assert_allclose(np.asarray(o_w), np.asarray(want_w),
+                               atol=1e-5)
+
+    # --- ring-paged prefill, q heads TP-sharded -----------------------
+    Sq = 4 * n_sp
+    hist = jnp.asarray([S - 5, 17], jnp.int32)
+    qc = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, Sq, KVH, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Sq, KVH, D)), jnp.float32)
+    pos = jnp.stack([jnp.arange(h, h + Sq, dtype=jnp.int32) for h in hist])
+    o = ring_paged_prefill(qc, kc, vc, pos, pos, kp, vp, bt, hist,
+                           mesh=mesh, sp_axis="sp", head_axis="tp",
+                           kv_head_axis=kv_ax)
+    hk, hv = sharded_pool_view(kp, bt), sharded_pool_view(vp, bt)
+    hpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    want = attention_ref(
+        qc, jnp.concatenate([hk, kc], 1), jnp.concatenate([hv, vc], 1),
+        pos, jnp.concatenate([hpos, pos], 1), causal=True,
+        kv_valid=jnp.concatenate(
+            [hpos < hist[:, None], jnp.ones((B, Sq), bool)], 1))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), atol=1e-5)
+    print(f"GQA KVH={KVH} (head {'sharded' if kv_ax else 'replicated'}) OK")
+
+print("DIST_OK")

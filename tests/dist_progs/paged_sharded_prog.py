@@ -132,6 +132,55 @@ want = attention_ref(
 np.testing.assert_allclose(np.asarray(o), np.asarray(want), atol=1e-5)
 print("TP x SP ring-paged prefill OK")
 
+# ---- head-sharded (TP x SP) pools: bit-identical to replicated ----------
+# Same striped pool, but the KVH axis additionally placed over "tp": each
+# device holds only its KVH/tp head slice.  Decode (fused append, with and
+# without a window) and ring-paged prefill must be BIT-identical to the
+# replicated-head runs — the per-head math is untouched, only placement
+# changes.
+kp_r = jax.device_put(jnp.asarray(kp), NamedSharding(mesh2d, P("sp")))
+vp_r = jax.device_put(jnp.asarray(vp), NamedSharding(mesh2d, P("sp")))
+hsh = NamedSharding(mesh2d, P("sp", None, None, "tp"))
+kp_h = jax.device_put(jnp.asarray(kp), hsh)
+vp_h = jax.device_put(jnp.asarray(vp), hsh)
+# per-device bytes drop exactly tp-fold vs the replicated-head layout
+assert (kp_h.addressable_shards[0].data.nbytes * 2
+        == kp_r.addressable_shards[0].data.nbytes)
+assert kp_h.addressable_shards[0].data.nbytes * 4 == kp_h.nbytes
+
+lengths = jnp.asarray([13, 29], jnp.int32)
+q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+k_new = jnp.asarray(rng.standard_normal((B, KVH, D)), jnp.float32)
+v_new = jnp.asarray(rng.standard_normal((B, KVH, D)), jnp.float32)
+o_r, kp_r2, vp_r2 = sharded_paged_decode(
+    q, kp_r, vp_r, bt, lengths, mesh=mesh2d, split_axis="sp",
+    k_new=k_new, v_new=v_new)
+o_h, kp_h2, vp_h2 = sharded_paged_decode(
+    q, kp_h, vp_h, bt, lengths, mesh=mesh2d, split_axis="sp",
+    head_axis="tp", k_new=k_new, v_new=v_new)
+assert np.array_equal(np.asarray(o_r), np.asarray(o_h))
+assert np.array_equal(np.asarray(sharded_pool_view(kp_r2, bt)),
+                      np.asarray(sharded_pool_view(kp_h2, bt)))
+assert np.array_equal(np.asarray(sharded_pool_view(vp_r2, bt)),
+                      np.asarray(sharded_pool_view(vp_h2, bt)))
+# the head-sharded result pools keep the head-sharded placement
+assert kp_h2.addressable_shards[0].data.nbytes * 4 == kp_h2.nbytes
+
+o_rw = sharded_paged_decode(q, kp_r2, vp_r2, bt, lengths + 1,
+                            mesh=mesh2d, split_axis="sp", window=11)
+o_hw = sharded_paged_decode(q, kp_h2, vp_h2, bt, lengths + 1,
+                            mesh=mesh2d, split_axis="sp", head_axis="tp",
+                            window=11)
+assert np.array_equal(np.asarray(o_rw), np.asarray(o_hw))
+
+o_rp = ring_paged_prefill(qc, kc, vc, pos, pos, kp_r, vp_r, bt, hist,
+                          mesh=mesh2d, sp_axis="sp", head_axis="tp")
+o_hp = ring_paged_prefill(qc, kc, vc, pos, pos, kp_h, vp_h, bt, hist,
+                          mesh=mesh2d, sp_axis="sp", head_axis="tp",
+                          kv_head_axis="tp")
+assert np.array_equal(np.asarray(o_rp), np.asarray(o_hp))
+print("head-sharded TP x SP islands OK")
+
 # ---- sharded PagedKVCache page plumbing (write/copy/gather/CoW) ---------
 from types import SimpleNamespace
 
@@ -198,5 +247,73 @@ np.testing.assert_allclose(
     kv.read_blocks([new_b])["0"]["k"], kv.read_blocks([src_b])["0"]["k"],
     atol=0)
 print("sharded PagedKVCache plumbing OK")
+
+# ---- head-sharded PagedKVCache plumbing (TP x SP) -----------------------
+# Same page-plumbing contract on a pool whose KVH axis is sharded over
+# "tp": write_chunk / read_blocks / copy_from / swap round-trip / CoW /
+# live restripe all reassemble full-width pages bit-identically, and
+# per-device pool bytes shrink exactly tp-fold.
+kvh_cfg = cfg
+kv_h = PagedKVCache(kvh_cfg, 16, page, kv_shards=2, mesh=mesh2d,
+                    shard_axis="sp", head_axis="tp")
+assert kv_h.kv_head_shards == 2 and kv_h.head_axis == "tp"
+bm_h = BlockManager(total_blocks=16, block_size=page, kv_shards=2,
+                    kv_head_shards=kv_h.kv_head_shards)
+pool_arr = kv_h.pools["0"]["k"]
+assert pool_arr.addressable_shards[0].data.nbytes * 4 == pool_arr.nbytes, \
+    "head-sharded pool must hold 1/(sp*tp) of the bytes per device"
+
+assert bm_h.reserve_virtual(0, L)
+blocks_h = bm_h.commit(0)
+kv_h.write_chunk(blocks_h, caches, jnp.arange(L, dtype=jnp.int32)[None])
+got_h = kv_h.read_blocks(blocks_h)["0"]["k"].reshape(
+    cfg.n_blocks, -1, KVH, D)[:, :L]
+np.testing.assert_allclose(got_h, np.asarray(seq_kv), atol=0)
+
+# head-sharded -> head-sharded stripe-aligned copy (admission handoff)
+kv_h2 = PagedKVCache(kvh_cfg, 16, page, kv_shards=2, mesh=mesh2d,
+                     shard_axis="sp", head_axis="tp")
+bm_h2 = BlockManager(total_blocks=16, block_size=page, kv_shards=2,
+                     kv_head_shards=2)
+assert bm_h2.reserve_virtual(3, L)
+dst_h = bm_h2.commit(3)
+kv_h2.copy_from(kv_h, blocks_h, dst_h)
+np.testing.assert_allclose(
+    kv_h2.read_blocks(dst_h)["0"]["v"].reshape(
+        cfg.n_blocks, -1, KVH, D)[:, :L],
+    2 * np.asarray(seq_kv), atol=0)
+
+# swap round-trip: device -> host (full-width pages) -> device
+host_h = HostKVPool(kvh_cfg, 8, page)
+hb_h = host_h.alloc(len(blocks_h))
+host_h.store(hb_h, kv_h.read_blocks(blocks_h))
+np.testing.assert_allclose(
+    host_h.pools["0"]["k"][:, hb_h].reshape(
+        cfg.n_blocks, -1, KVH, D)[:, :L],
+    np.asarray(seq_kv), atol=0)
+kv_h2.copy_from(host_h, hb_h[:2], dst_h[:2])
+np.testing.assert_allclose(
+    kv_h2.read_blocks(dst_h[:2])["0"]["k"],
+    host_h.pools["0"]["k"][:, hb_h[:2]], atol=0)
+
+# CoW page duplication stays on-shard under head sharding
+src_hb = blocks_h[2]
+new_hb = bm_h._take(1, offset=2)[0]
+assert bm_h.shard_of(new_hb) == bm_h.shard_of(src_hb)
+kv_h.copy_within(src_hb, new_hb)
+np.testing.assert_allclose(
+    kv_h.read_blocks([new_hb])["0"]["k"],
+    kv_h.read_blocks([src_hb])["0"]["k"], atol=0)
+
+# live restripe 2 -> 1: cross-shard page moves keep the head slicing
+pairs_h = bm_h.restripe(1)
+assert pairs_h, "narrowing the stripe must move some pages"
+kv_h.restripe(pairs_h)
+blocks_r = bm_h.allocs[0]
+np.testing.assert_allclose(
+    kv_h.read_blocks(blocks_r)["0"]["k"].reshape(
+        cfg.n_blocks, -1, KVH, D)[:, :L],
+    np.asarray(seq_kv), atol=0)
+print("head-sharded PagedKVCache plumbing OK")
 
 print("DIST_OK")

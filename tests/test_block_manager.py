@@ -54,13 +54,35 @@ def check_invariants(bm: BlockManager):
         assert bm._virt_shard[s] == 0, "virtual on an idle shard"
 
 
-def apply_ops(ops, kv_shards: int = 1):
+def apply_ops(ops, kv_shards: int = 1, kv_head_shards: int = 1):
     """Drive a BlockManager through a random op sequence.  Each op is
     (kind, rid, n); invalid ops (unknown rid, over-capacity asks) are
-    skipped exactly like the engine guards them."""
+    skipped exactly like the engine guards them.
+
+    With ``kv_head_shards > 1`` a numpy content mirror rides along —
+    each live block's page payload, stored as the per-TP-device KVH/tp
+    head slices of the head-sharded pool layout.  Every op keeps the
+    mirror consistent (restripes move content under the id remap, CoW
+    duplicates it, releases drop it), and op kind 8 runs the swap
+    staging round-trip: gather the slices to a full-width host page and
+    re-slice them back, bit-identical, with no refcount/hash drift."""
     bm = BlockManager(total_blocks=TOTAL, block_size=BS,
-                      kv_shards=kv_shards)
+                      kv_shards=kv_shards, kv_head_shards=kv_head_shards)
     rng = np.random.default_rng(1234)
+    hs = kv_head_shards
+    KVH, D = 4, 2                          # mirror payload dims (KVH % hs == 0)
+    mirror = {}                            # block -> [hs slices (BS, KVH/hs, D)]
+
+    def sync_mirror():
+        if hs == 1:
+            return
+        live = {b for blocks in bm.allocs.values() for b in blocks}
+        for b in live - mirror.keys():     # fresh blocks: random content
+            full = rng.standard_normal((BS, KVH, D)).astype(np.float32)
+            mirror[b] = list(np.split(full, hs, axis=1))
+        for b in list(mirror.keys() - live):
+            del mirror[b]                  # freed blocks drop their pages
+
     for kind, rid, n in ops:
         if kind == 0:                                   # reserve + commit
             if rid in bm.allocs or rid in bm.virtual_tokens:
@@ -94,6 +116,9 @@ def apply_ops(ops, kv_shards: int = 1):
                     src, dst = bm.ensure_writable(rid, idx)
                     assert src != dst
                     assert bm.allocs[rid][idx] == dst
+                    if hs > 1 and src in mirror:
+                        # physical CoW copies every head slice in place
+                        mirror[dst] = [s.copy() for s in mirror[src]]
         elif kind == 5:                                 # publish hashes
             if rid in bm.allocs and bm.allocs[rid]:
                 toks = rng.integers(0, 50, len(bm.allocs[rid]) * BS)
@@ -115,6 +140,36 @@ def apply_ops(ops, kv_shards: int = 1):
                 for old, new in pairs:
                     assert bm.shard_of(old) != bm.shard_of(new), \
                         "restripe pair stayed on-shard"
+                    if hs > 1 and old in mirror:
+                        # the all_to_all moves ALL head slices of a page
+                        # together (head layout is orthogonal to the SP
+                        # stripe): content follows the id remap unsplit
+                        mirror[new] = mirror.pop(old)
+                assert bm.kv_head_shards == hs, \
+                    "restripe must never change the head layout"
+        elif kind == 8 and hs > 1:                      # swap round-trip
+            if rid in bm.allocs and bm.allocs[rid]:
+                ref_before = dict(bm.ref)
+                hash_before = dict(bm.hash_of)
+                for b in bm.allocs[rid]:
+                    # device->host gather: concat the per-device KVH/tp
+                    # slices into one full-width page (read_blocks)...
+                    full = np.concatenate(mirror[b], axis=1)
+                    assert full.shape == (BS, KVH, D)
+                    # ...host->device scatter: re-slice by head shard
+                    # (shard_scatter_kv_blocks' in-spec slicing)
+                    back = np.split(full, hs, axis=1)
+                    for got, want in zip(back, mirror[b]):
+                        assert np.array_equal(got, want), \
+                            "head slice drift across swap round-trip"
+                    mirror[b] = back
+                assert bm.ref == ref_before, "swap round-trip touched refs"
+                assert bm.hash_of == hash_before, \
+                    "swap round-trip touched hashes"
+        sync_mirror()
+        if hs > 1:
+            assert mirror.keys() == \
+                {b for bl in bm.allocs.values() for b in bl}, "mirror drift"
         check_invariants(bm)
     for rid in list(bm.virtual_tokens):
         bm.cancel_virtual(rid)
@@ -153,6 +208,20 @@ def test_random_sequences_striped_pool_4way(ops):
     """4-way physical pool: restripes walk 1..4 active shards under live
     allocations, reservations and prefix sharing."""
     apply_ops(ops, kv_shards=4)
+
+
+@settings(max_examples=40)
+@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 5),
+                          st.integers(1, 4 * BS)),
+                min_size=1, max_size=60))
+def test_random_sequences_head_sharded_pool(ops):
+    """Head-sharded (TP×SP) pool layout: every invariant of the 2-way
+    striped pool, plus a per-block content mirror held as KVH/tp head
+    slices — restripes move whole pages (all slices together) under the
+    id remap, CoW duplicates every slice, and the swap staging gather/
+    scatter (op kind 8) round-trips the slices bit-identically without
+    refcount or hash drift."""
+    apply_ops(ops, kv_shards=2, kv_head_shards=2)
 
 
 def test_striped_take_respects_per_shard_exhaustion():

@@ -66,6 +66,15 @@ def test_cdsp_submesh_rebalance():
 # The sharded-paged programs force only 4 devices and run reduced shapes,
 # so they stay un-marked (not slow): the CI multi-device job runs them on
 # every PR (RUN_DIST_TESTS=1, -m "not slow").
+def test_gqa_head_shard_distributed():
+    """GQA head-sharded pools on a 2x4 (sp x tp) mesh: KVH % tp == 0 runs
+    the head-sharded TP x SP layout (per-device pool bytes cut tp-fold),
+    n_kv < tp falls back to the replicated pool + per-call slicing — both
+    match the single-device dense oracle (decode incl. window, ring-paged
+    prefill)."""
+    _run("gqa_head_shard_prog.py")
+
+
 def test_sharded_paged_primitives_distributed():
     """Split-KV paged decode + ring-paged prefill over a striped sharded
     pool match the single-device paged oracle on 2- and 4-way splits

@@ -176,3 +176,122 @@ def test_merge_partials_property():
     got, _ = ref.merge_partials(outs, lses)
     want = ref.attention_ref(q, k, v, q_pos, jnp.arange(S), causal=True)
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def _stripe_shard(rng, n, idx, k, v, page):
+    """One shard's view of an n-way striped pool: this shard holds global
+    pages ``j * n + idx`` (permuted local ids, last local id = scratch).
+    Returns (k_loc, v_loc, bt_loc, page_pos) — the exact inputs the
+    sharded decode island hands to ``ops.paged_decode_attention``."""
+    k, v = np.asarray(k), np.asarray(v)
+    B, S = k.shape[:2]
+    npg = S // page
+    npg_loc = -(-npg // n)
+    bps = B * npg_loc
+    kp = np.zeros((bps + 1, page) + k.shape[2:], np.float32)
+    vp = np.zeros_like(kp)
+    bt = np.full((B, npg_loc), bps, np.int32)
+    order = list(rng.permutation(bps))
+    for b in range(B):
+        for jloc in range(npg_loc):
+            g = jloc * n + idx
+            if g >= npg:
+                continue
+            lid = order.pop()
+            bt[b, jloc] = lid
+            kp[lid] = k[b, g * page:(g + 1) * page]
+            vp[lid] = v[b, g * page:(g + 1) * page]
+    gpage = np.arange(npg_loc, dtype=np.int32) * n + idx
+    page_pos = np.broadcast_to((gpage * page)[None], (B, npg_loc))
+    return (jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt),
+            jnp.asarray(page_pos.copy()))
+
+
+@pytest.mark.parametrize("window", [None, 11])
+def test_paged_decode_stripe_page_pos_interpret(window):
+    """Windowed sharded-decode shard partials, interpret-mode kernel:
+    each stripe shard's ``paged_flash_decode`` call (strided global
+    ``page_pos``, native length/window masks) merges by LSE into exactly
+    the dense-window oracle — the kernel-level half of
+    ``sharded_paged_decode`` with the gather-slab fallback gone."""
+    from repro.kernels.flash_decode import paged_flash_decode
+    B, H, KVH, D, page, n = 2, 4, 2, 16, 8, 2
+    S = 6 * page
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KVH, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KVH, D), jnp.float32)
+    lengths = jnp.asarray([S - 3, 17], jnp.int32)
+    rng = np.random.default_rng(3)
+    outs, lses = [], []
+    for idx in range(n):
+        kp, vp, bt, pp = _stripe_shard(rng, n, idx, k, v, page)
+        o, l = paged_flash_decode(q, kp, vp, bt, lengths, window=window,
+                                  page_pos=pp, with_lse=True,
+                                  interpret=True)
+        outs.append(o[:, None])
+        lses.append(l[..., None])
+    got, _ = ref.merge_partials(outs, lses)
+    want = ref.decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_append_attend_fused_and_donated():
+    """The fused decode tick: ``ops.paged_decode_attention(..., k_new)``
+    matches scatter-then-attend exactly, and the donated pools are
+    updated IN PLACE — buffer identity, no silent copy."""
+    from repro.kernels import ops
+    B, H, KVH, D, page, npg = 2, 4, 2, 16, 8, 4
+    npages = 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    kp = _rand(ks[0], (npages + 1, page, KVH, D), jnp.float32)
+    vp = _rand(ks[1], (npages + 1, page, KVH, D), jnp.float32)
+    q = _rand(ks[2], (B, H, D), jnp.float32)
+    kn = _rand(ks[3], (B, KVH, D), jnp.float32)
+    vn = _rand(ks[4], (B, KVH, D), jnp.float32)
+    bt = jnp.asarray(
+        np.random.default_rng(0).permutation(npages)[:B * npg]
+        .reshape(B, npg).astype(np.int32))
+    lengths = jnp.asarray([13, 29], jnp.int32)
+    bidx = jnp.arange(B)
+    phys, slot = bt[bidx, lengths // page], lengths % page
+    # oracle: separate scatter then attend
+    kp_o = kp.at[phys, slot].set(kn)
+    vp_o = vp.at[phys, slot].set(vn)
+    want = ops.paged_decode_attention(q, kp_o, vp_o, bt, lengths + 1,
+                                      impl="ref")
+    ptr_k = kp.unsafe_buffer_pointer()
+    ptr_v = vp.unsafe_buffer_pointer()
+    o, kp2, vp2 = ops.paged_decode_attention(
+        q, kp, vp, bt, lengths, impl="ref", k_new=kn, v_new=vn,
+        append_page=phys, append_slot=slot)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(kp2), np.asarray(kp_o))
+    np.testing.assert_array_equal(np.asarray(vp2), np.asarray(vp_o))
+    assert kp2.unsafe_buffer_pointer() == ptr_k, "k pool was copied"
+    assert vp2.unsafe_buffer_pointer() == ptr_v, "v pool was copied"
+
+
+def test_page_helper_donation_no_copy():
+    """donate_argnums audit: every pool-writing page helper updates its
+    (donated) pool buffer in place — buffer identity across the call."""
+    from repro.kernels import flash_decode as fd
+    nb, npages, page, KVH, D = 2, 8, 4, 2, 8
+    pool = jnp.zeros((nb, npages + 1, page, KVH, D), jnp.float32)
+    ptr = pool.unsafe_buffer_pointer()
+    pool = fd.scatter_kv_prefill(
+        pool, jnp.arange(4, dtype=jnp.int32),
+        jnp.ones((nb, 3 * page, KVH, D), jnp.float32))
+    assert pool.unsafe_buffer_pointer() == ptr
+    pool = fd.scatter_kv_token(
+        pool, jnp.zeros((1, 4), jnp.int32), jnp.asarray([5], jnp.int32),
+        jnp.ones((nb, 1, KVH, D), jnp.float32))
+    assert pool.unsafe_buffer_pointer() == ptr
+    pool = fd.scatter_kv_blocks(
+        pool, jnp.asarray([6], jnp.int32),
+        jnp.ones((nb, 1, page, KVH, D), jnp.float32))
+    assert pool.unsafe_buffer_pointer() == ptr
+    pool = fd.copy_kv_block_within(pool, jnp.asarray(6, jnp.int32),
+                                   jnp.asarray(7, jnp.int32))
+    assert pool.unsafe_buffer_pointer() == ptr
