@@ -38,6 +38,7 @@ uploads the stable-schema ``BENCH_engine.json`` it writes at the repo
 root, so the BENCH_* trajectory accumulates per commit.
 """
 
+import os
 import time
 
 from common import fmt_row
@@ -257,6 +258,35 @@ def run(quick: bool = False):
           f"{p99_off * 1e3:.2f}ms | {mx_ms['piggyback_ticks']} fused / "
           f"{mx_off.mixed_stats['deferred_ticks']} deferred ticks | "
           f"outputs match: {mx_match}")
+
+    # --- latency attribution: the tracer's TTFT decomposition on the
+    # piggyback trace (the richest lifecycle: fused + deferred ticks,
+    # overlapping prefills).  Components must sum bit-exactly to each
+    # request's observed TTFT (telemetry.attribution_total); the TBT
+    # cause histogram tags every inter-token gap.  BENCH_TRACE=<path>
+    # additionally writes the full Perfetto-loadable trace document.
+    from repro.serving.telemetry import (ATTRIBUTION_ORDER,
+                                         attribution_total)
+
+    att_tot = {k: 0.0 for k in ATTRIBUTION_ORDER}
+    att_exact = True
+    causes: dict = {}
+    for r in mx_on.reqs.values():
+        comps = mx_on.tracer.attribution(r.rid, r.arrival, r.prefill_done)
+        att_exact &= attribution_total(comps) == r.ttft
+        for k in ATTRIBUTION_ORDER:
+            att_tot[k] += comps[k]
+        for c in mx_on.tracer.tbt_causes(r.rid):
+            causes[c] = causes.get(c, 0) + 1
+    att_grand = sum(att_tot.values()) or 1.0
+    cause_s = ",".join(f"{c}:{n}" for c, n in sorted(causes.items()))
+    print(f"latency attribution: " + " ".join(
+        f"{k}={att_tot[k] / att_grand:.2f}" for k in ATTRIBUTION_ORDER
+        if att_tot[k]) + f" | bit-exact: {att_exact} | causes {cause_s}")
+    trace_path = os.environ.get("BENCH_TRACE")
+    if trace_path:
+        mx_on.export_trace(trace_path)
+        print(f"wrote trace to {trace_path}")
 
     # --- elastic restripe vs drain: resizing the live SP stripe width.
     # The drain-free path migrates only the pages whose owning shard
@@ -517,6 +547,12 @@ def run(quick: bool = False):
                 f"med_on={med_on:.4f}|med_off={med_off:.4f}"
                 f"|p99_on={p99_on:.4f}|p99_off={p99_off:.4f}"
                 f"|match={int(mx_match)}"),
+        fmt_row("engine.latency_attribution",
+                mx_wall * 1e6 / max(sum(len(t) for t in mx_on_out.values()),
+                                    1),
+                "|".join(f"{k}={att_tot[k] / att_grand:.3f}"
+                         for k in ATTRIBUTION_ORDER)
+                + f"|bitexact={int(att_exact)}|causes={cause_s}"),
         restripe_row,
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
         fmt_row("engine.kernel_traffic_tick_us", fu_us,

@@ -36,7 +36,16 @@ def main() -> None:
                          "derived}]} — bare --json writes BENCH_engine.json "
                          "at the repo root (the CI artifact); an explicit "
                          "path overrides")
+    ap.add_argument("--trace", nargs="?", default=None,
+                    const=os.path.join(os.path.dirname(__file__), "..",
+                                       "TRACE_engine.json"),
+                    help="also emit the Perfetto-loadable trace/v1 document "
+                         "from the engine_fidelity latency-attribution run "
+                         "(bare --trace writes TRACE_engine.json at the "
+                         "repo root; summarize with tools/trace_report.py)")
     args, _ = ap.parse_known_args()
+    if args.trace:
+        os.environ["BENCH_TRACE"] = os.path.abspath(args.trace)
     mods = [m for m in MODULES if args.only is None or args.only in m]
     rows, failures = [], []
     for name in mods:

@@ -216,6 +216,29 @@ class BlockManager:
                        (s + 1) * self.blocks_per_shard))
             for s in range(self.kv_shards)]
         self._virt_shard: List[int] = [0] * self.kv_shards
+        self._metrics = None                # telemetry registry (optional)
+        self._mprefix = ""
+
+    # ----------------------------------------------------------- telemetry
+    def bind_metrics(self, metrics, prefix: str = "") -> None:
+        """Publish this pool's occupancy into a telemetry
+        ``MetricsRegistry``: gauges ``<prefix>free_blocks`` /
+        ``<prefix>effective_free`` / ``<prefix>free_shard<j>`` refresh
+        whenever the books change (reserve/commit/extend/release/
+        restripe)."""
+        self._metrics = metrics
+        self._mprefix = prefix
+        self._sample()
+
+    def _sample(self) -> None:
+        m = self._metrics
+        if m is None:
+            return
+        p = self._mprefix
+        m.gauge(p + "free_blocks").set(self.n_free)
+        m.gauge(p + "effective_free").set(self.effective_free())
+        for s in range(self.kv_shards):
+            m.gauge(f"{p}free_shard{s}").set(len(self.shard_free[s]))
 
     @property
     def free_blocks(self) -> List[int]:
@@ -349,6 +372,7 @@ class BlockManager:
         self.virtual_tokens[rid] = n_tokens
         self.virtual_offset[rid] = offset
         self._virt_add(rid)
+        self._sample()
         return True
 
     def update_virtual(self, rid: int, n_tokens: int, offset: int) -> None:
@@ -360,6 +384,7 @@ class BlockManager:
         self.virtual_tokens[rid] = n_tokens
         self.virtual_offset[rid] = offset
         self._virt_add(rid)
+        self._sample()
 
     def cancel_virtual(self, rid: int) -> None:
         """Drop a reservation without committing it (cancelled swap-in)."""
@@ -367,6 +392,7 @@ class BlockManager:
             self._virt_add(rid, -1)
             self.virtual_tokens.pop(rid, None)
             self.virtual_offset.pop(rid, None)
+            self._sample()
 
     def commit(self, rid: int, shared: Sequence[int] = ()) -> List[int]:
         """Virtual reservation -> physical blocks (transfer complete).
@@ -387,6 +413,7 @@ class BlockManager:
         blocks = list(shared) + self._take(self.blocks_for(n),
                                            offset=len(shared))
         self.allocs[rid] = blocks
+        self._sample()
         return blocks
 
     def extend(self, rid: int, n_tokens: int) -> bool:
@@ -405,6 +432,7 @@ class BlockManager:
             # reservation (an in-flight swap-in holds one across events)
             return False
         self.allocs[rid] += self._take(need, offset=len(self.allocs[rid]))
+        self._sample()
         return True
 
     def release(self, rid: int) -> List[int]:
@@ -438,6 +466,7 @@ class BlockManager:
         for b in freed:
             self.shard_free[self.shard_of(b)].append(b)
         self.cancel_virtual(rid)
+        self._sample()
         return freed
 
     # ------------------------------------------------- prefix sharing / CoW
@@ -502,6 +531,7 @@ class BlockManager:
         self.ref[b] -= 1
         self.allocs[rid][idx] = new
         self.stats["cow"] += 1
+        self._sample()
         return b, new
 
     # ------------------------------------------------- elastic restriping
@@ -577,6 +607,7 @@ class BlockManager:
             self.shard_free[self.shard_of(old)].append(old)
         self.active_shards = new_n
         self._virt_shard = self._virtual_by_shard()
+        self._sample()
         return sorted(remap.items())
 
 

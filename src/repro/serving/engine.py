@@ -92,6 +92,7 @@ from repro.serving.kv_offload import (HostKVPool, HostPrefixCache,
                                       choose_preempt_policy)
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import ClusterSpec, Policy, Simulator
+from repro.serving.telemetry import OpProfiler
 from repro.serving.transfer import TransferManager
 
 
@@ -406,8 +407,11 @@ class ServingEngine(Simulator):
                  offload_model: Optional[HostOffloadModel] = None,
                  decode_hosts: Optional[Dict[int, tuple]] = None,
                  piggyback: bool = True,
-                 decode_budget: Optional[int] = None):
-        super().__init__(spec, policy, decode_model)
+                 decode_budget: Optional[int] = None,
+                 profile_ops: bool = False):
+        # the tracer is always on in the real engine — the preempt/
+        # restripe/mixed log views below are backed by it
+        super().__init__(spec, policy, decode_model, trace=True)
         assert spec.disaggregated, "real engine decode is disaggregated"
         if preempt_policy not in ("auto", "swap", "recompute"):
             raise ValueError(
@@ -422,7 +426,10 @@ class ServingEngine(Simulator):
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.chunk_log: Dict[int, List[dict]] = {}
-        self.preempt_log: List[dict] = []
+        # optional wall-clock profiling around the jitted page ops
+        # (fused tick, chunk scatter, restripe all-to-all) -> named
+        # op_wall_us/* histograms in the metrics registry
+        self.profiler = OpProfiler(self.metrics, enabled=profile_ops)
         # sequence-parallel sharded pools: prefill stripes over sp_axis
         # (ring-paged history), decode over kv_split_axis (split-KV paged
         # decode).  Admission moves pages between the two pools with
@@ -492,7 +499,6 @@ class ServingEngine(Simulator):
         self._resume_seq: Dict[int, np.ndarray] = {}
         # elastic SP restripe (drain-free stripe-width resize of the paged
         # pools) + host-prefix-cache-aware planning state
-        self.restripe_log: List[dict] = []
         self._restripe_pending = False
         # decode ticks that passed while recompute-preempted requests were
         # off the batch (one count per stalled request per tick) — the
@@ -522,8 +528,16 @@ class ServingEngine(Simulator):
         self._busy_until: Dict[int, float] = {}
         self._next_tick: Dict[int, float] = {}
         self._fused_tick: Optional[int] = None
-        self.mixed_log: List[dict] = []
         self.controller = rate_controller
+        # wire the block pools, transfer managers and host tier into the
+        # metrics registry: per-shard free-block gauges and PCIe byte
+        # counters update at the same call sites the books do
+        self.pblocks.bind_metrics(self.metrics, "prefill/")
+        for did, d in enumerate(self.dstates):
+            d.blocks.bind_metrics(self.metrics, f"decode{did}/")
+            d.transfers.bind_metrics(self.metrics, f"decode{did}/")
+        if self.host_cache is not None:
+            self.host_cache.bind_metrics(self.metrics, "host_cache/")
         if rate_controller is not None:
             own = getattr(policy, "controller", None)
             if own is not None and own is not rate_controller:
@@ -638,6 +652,8 @@ class ServingEngine(Simulator):
             # host-cache-aware plan: only the uncached remainder is
             # chunked; the cached prefix rides in as promoted pages
             req = self.reqs[rid]
+            self.tracer.record(now, "arrive", rid=rid,
+                               track=("request", rid), host_skip=skip)
             self.policy.on_arrival(now)
             shadow = Request(rid=rid, arrival=now,
                              prompt_len=req.prompt_len - skip,
@@ -645,6 +661,8 @@ class ServingEngine(Simulator):
             alloc = self.policy.plan(shadow, self._pool_view(now), now)
             if alloc is None:
                 self.rejected.append(rid)
+                self.tracer.record(now, "reject", rid=rid,
+                                   track=("request", rid))
                 return
             self._host_skip[rid] = skip
             self._prefill[rid] = _PrefillState()
@@ -697,8 +715,9 @@ class ServingEngine(Simulator):
         st.logits, new_caches, st.aux = prefill_chunk_paged(
             self.params, self.cfg, self.ctx, toks, pos,
             self.pkv.pools, hist_bt, st.off, st.aux)
-        self.pkv.write_chunk(alloc, new_caches, pos,
-                             active=self.pblocks.active_shards)
+        with self.profiler.op("scatter_chunk"):
+            self.pkv.write_chunk(alloc, new_caches, pos,
+                                 active=self.pblocks.active_shards)
         st.off += L
         self.chunk_log.setdefault(rid, []).append({
             "chunk": ci, "len": L, "sp": sp,
@@ -758,6 +777,8 @@ class ServingEngine(Simulator):
         req.preemptions += 1
         req.phase = Phase.QUEUED
         self._prefill[rid] = _PrefillState()
+        self.tracer.record(now, "requeue", rid=rid, track=("request", rid),
+                           reason="restart")
         self._push(now + 0.05, "requeue", rid)
 
     def _promote_host_prefix(self, now: float, rid: int, skip: int,
@@ -864,10 +885,12 @@ class ServingEngine(Simulator):
         migrated = 0
         for bm, kv in self._pool_pairs():
             pairs = bm.restripe(min(n, bm.kv_shards))
-            kv.restripe(pairs)
+            with self.profiler.op("restripe_all_to_all"):
+                kv.restripe(pairs)
             migrated += len(pairs)
         self.ctx = self.ctx.with_(active_pool_shards=n)
-        self.restripe_log.append({"t": now, "n_old": old, "n_new": n,
+        self.tracer.record(now, "restripe",
+                           entry={"t": now, "n_old": old, "n_new": n,
                                   "migrated_blocks": migrated})
         self._restripe_pending = False
 
@@ -901,6 +924,9 @@ class ServingEngine(Simulator):
         req, st = self.reqs[rid], self._prefill[rid]
         if first:
             req.preemptions += 1
+            self.tracer.record(now, "requeue", rid=rid,
+                               track=("request", rid),
+                               reason="chunk_boundary")
             # cancel the old plan NOW — before attempting the re-plan — so
             # its un-executed chunk/prefill events can never fire while we
             # wait for the pool, and its reservations stop inflating queues
@@ -933,6 +959,7 @@ class ServingEngine(Simulator):
         Wire sizes are the pages each chunk actually finalised in the
         prefill pool (paged handoff), not the dense-equivalent bytes."""
         dst = self.dstates[req.decode_instance]
+        self._trace_transfer_start(now, req.rid)
         chunk_bytes = TransferManager.paged_chunk_bytes(
             [c for c, _ in req.chunk_plan], dst.block_size,
             self.spec.kv_bytes_per_token)
@@ -1100,14 +1127,17 @@ class ServingEngine(Simulator):
             "chunks_discarded": 0}
         if policy == "swap":
             if self._swap_out(now, rid):
-                self.preempt_log.append(entry)
+                self.tracer.record(now, "preempt", rid=rid,
+                                   track=("request", rid), entry=entry)
                 return
             # host tier full of pinned swap records: recompute fallback
             entry["policy"] = "recompute"
             self.swap.counters["fallback_recompute"] += 1
         entry["resume_tokens"] = resume
         entry["chunks_discarded"] = len(req.chunk_plan or [])
-        self.preempt_log.append(entry)
+        self.tracer.end("decode_resident", rid, now)
+        self.tracer.record(now, "preempt", rid=rid, track=("request", rid),
+                           entry=entry)
         meta = d.evict(rid)
         if meta.shared_tokens:
             inst.debit_shared(meta.shared_tokens)
@@ -1224,6 +1254,11 @@ class ServingEngine(Simulator):
         self.swap.counters["swap_outs"] += 1
         self.swap.counters["bytes_out"] += n_bytes
         d.transfers.note_swap("out", n_bytes)
+        self.tracer.end("decode_resident", rid, now)
+        self.tracer.begin("swap", rid, now, track=("request", rid))
+        self.tracer.record(now, "swap_out", rid=rid,
+                           track=("request", rid), blocks=n,
+                           n_bytes=n_bytes)
         self._push(now + self.swap.model.swap_time(n_bytes),
                    "swap_out_done", rid)
         return True
@@ -1260,6 +1295,8 @@ class ServingEngine(Simulator):
         n_bytes = self.swap.block_bytes(len(rec.host_blocks))
         self.swap.counters["bytes_in"] += n_bytes
         d.transfers.note_swap("in", n_bytes)
+        self.tracer.record(now, "swap_in_start", rid=rid,
+                           track=("request", rid), n_bytes=n_bytes)
         self._push(now + self.swap.model.swap_time(n_bytes),
                    "swap_in_done", rid)
 
@@ -1310,6 +1347,12 @@ class ServingEngine(Simulator):
         if shared_tok:
             inst.credit_shared(shared_tok)
         self.swap.counters["swap_ins"] += 1
+        self.tracer.end("swap", rid, now)
+        self.tracer.record(now, "swap_in_done", rid=rid,
+                           track=("request", rid),
+                           shared_blocks=len(shared))
+        self.tracer.begin("decode_resident", rid, now,
+                          track=("request", rid))
         req.phase = Phase.DECODE
         inst.batch.append(req)
         if not inst.ticking:
@@ -1335,6 +1378,29 @@ class ServingEngine(Simulator):
                 inst.swap_in_cancel(self.reqs[rid], rec.cache_len)
                 return True
         return False
+
+    # --------------------------------------------- tracer-backed log views
+    # The four ad-hoc logs predate the unified tracer.  Each preemption/
+    # restripe/fused-step now records ONE tracer event carrying the legacy
+    # dict verbatim, and these views rebuild the exact pre-telemetry lists
+    # (same dicts, same order) so existing consumers are unchanged.
+    @property
+    def preempt_log(self) -> List[dict]:
+        """Decode preemption records (see ``_preempt_decode``):
+        t/rid/instance/reason/policy/swap_in_ms/recompute_ms/
+        resume_tokens/free_blocks/generated/chunks_discarded."""
+        return self.tracer.entries("preempt")
+
+    @property
+    def restripe_log(self) -> List[dict]:
+        """Completed live restripes: t/n_old/n_new/migrated_blocks."""
+        return self.tracer.entries("restripe")
+
+    @property
+    def mixed_log(self) -> List[dict]:
+        """Fused mixed prefill/decode steps (``_run_piggyback``):
+        t/rid/chunk/instance/ticks/tokens/window."""
+        return self.tracer.entries("fused_step")
 
     @property
     def swap_stats(self) -> Dict[str, float]:
@@ -1525,9 +1591,11 @@ class ServingEngine(Simulator):
                 toks += nb
                 t = self._next_tick.get(did, t + pdt)
             if ticks:
-                self.mixed_log.append({
-                    "t": now, "rid": rid, "chunk": ci, "instance": did,
-                    "ticks": ticks, "tokens": toks, "window": t_end - now})
+                self.tracer.record(
+                    now, "fused_step", rid=rid, track=("decode", did),
+                    entry={"t": now, "rid": rid, "chunk": ci,
+                           "instance": did, "ticks": ticks, "tokens": toks,
+                           "window": t_end - now})
 
     def _tick_latency(self, d) -> float:
         if self._fused_tick == d.did:
@@ -1535,6 +1603,9 @@ class ServingEngine(Simulator):
             return self.decode_model.piggyback_latency(
                 len(d.batch), cache, tp=self.spec.tp_decode)
         return super()._tick_latency(d)
+
+    def _tick_mode(self, did: int) -> str:
+        return "fused" if self._fused_tick == did else "standalone"
 
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.dstates[did]
@@ -1553,13 +1624,19 @@ class ServingEngine(Simulator):
                 # window: a standalone tick cannot run until it ends
                 # (piggybacked ticks already ran as part of the step)
                 inst.deferred_ticks += 1
+                self.tracer.record(now, "defer", track=("decode", did),
+                                   until=bu)
+                self.metrics.counter("ticks/deferred").inc()
                 self._push(bu, "decode_tick", did)
                 return
         # every tick that passes while a recompute-preempted request is
         # away (re-prefilling, in transfer, or waiting on a batch row) is
         # a stalled token for that request — the drain-vs-restripe
         # benchmark's cost metric
-        self.stall_ticks += len(self._stalled)
+        if self._stalled:
+            self.stall_ticks += len(self._stalled)
+            self.metrics.counter("restripe/stall_ticks").inc(
+                len(self._stalled))
         self._grow_or_preempt(now, did)
         # rows claimed by an in-flight swap-in have no meta yet: the KV is
         # still crossing PCIe, so they sit this tick out
@@ -1584,10 +1661,12 @@ class ServingEngine(Simulator):
                    if self.cfg.rope_type == "mrope" else clen[:, None])
             bt = d.block_table(active)
             caches = d.build_caches(active, bt)
-            logits, _, new_caches = forward(
-                self.params, self.cfg, self.ctx, toks, pos, "decode",
-                caches=caches, cache_len=clen)
-            d.absorb(new_caches, active)
+            with self.profiler.op("fused_tick" if fused
+                                  else "decode_tick"):
+                logits, _, new_caches = forward(
+                    self.params, self.cfg, self.ctx, toks, pos, "decode",
+                    caches=caches, cache_len=clen)
+                d.absorb(new_caches, active)
             nxt = np.asarray(jnp.argmax(
                 logits[:, 0, :self.cfg.vocab_size], axis=-1))
             for r in active:

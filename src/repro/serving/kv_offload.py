@@ -210,6 +210,23 @@ class HostPrefixCache:
         self.entries: "OrderedDict[int, _CacheEntry]" = OrderedDict()
         self.stats = {"demotions": 0, "hits": 0, "evictions": 0,
                       "rejected": 0}
+        self._metrics = None
+        self._mprefix = ""
+
+    def bind_metrics(self, metrics, prefix: str = "") -> None:
+        """Mirror ``stats`` increments into telemetry counters
+        (``<prefix>demotions`` / ``hits`` / ``evictions`` / ``rejected``)
+        and keep a ``<prefix>entries`` gauge of the cache size."""
+        self._metrics = metrics
+        self._mprefix = prefix
+        metrics.gauge(prefix + "entries").set(len(self.entries))
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        if self._metrics is not None:
+            self._metrics.counter(self._mprefix + key).inc(n)
+            self._metrics.gauge(self._mprefix + "entries").set(
+                len(self.entries))
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -217,7 +234,7 @@ class HostPrefixCache:
     def _evict_lru(self) -> None:
         _, ent = self.entries.popitem(last=False)
         self.pool.free([ent.block])
-        self.stats["evictions"] += 1
+        self._bump("evictions")
 
     def evict_until(self, n_free: int) -> None:
         """Shrink the cache until the pool has ``n_free`` blocks (or the
@@ -238,12 +255,12 @@ class HostPrefixCache:
             self._evict_lru()
             blocks = self.pool.alloc(1)
         if blocks is None:
-            self.stats["rejected"] += 1
+            self._bump("rejected")
             return False
         self.pool.store(blocks, data)
         self.entries[h] = _CacheEntry(blocks[0], tuple(int(t)
                                                        for t in tokens))
-        self.stats["demotions"] += 1
+        self._bump("demotions")
         return True
 
     def match_chain(self, hashes: Sequence[int], seq: np.ndarray,
@@ -268,5 +285,5 @@ class HostPrefixCache:
                 self.entries.move_to_end(h)
             out.append(ent.block)
         if not peek:
-            self.stats["hits"] += len(out)
+            self._bump("hits", len(out))
         return out

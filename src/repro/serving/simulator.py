@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.chunk_planner import Allocation, CDSPScheduler, Chunk
 from repro.core.latency_model import DecodeLatencyModel, PrefillLatencyModel
+from repro.serving import telemetry
 from repro.serving.request import Phase, Request
 
 
@@ -271,10 +272,17 @@ class DecodeInstance:
 
 class Simulator:
     def __init__(self, spec: ClusterSpec, policy: Policy,
-                 decode_model: Optional[DecodeLatencyModel] = None):
+                 decode_model: Optional[DecodeLatencyModel] = None,
+                 trace: bool = False):
         self.spec = spec
         self.policy = policy
         self.decode_model = decode_model or DecodeLatencyModel()
+        # unified telemetry (serving/telemetry.py): every lifecycle site
+        # below records through the tracer.  Off by default for the pure
+        # simulator — large stress sweeps pay nothing — and always on in
+        # the real engine, whose log views are tracer-backed.
+        self.tracer = telemetry.Tracer(enabled=trace)
+        self.metrics = self.tracer.metrics
         self.free_at = {i: 0.0 for i in range(spec.n_prefill)}
         self.decodes = [DecodeInstance(d, spec.cache_slots,
                                        backends_free=spec.backends_per_decode)
@@ -316,10 +324,16 @@ class Simulator:
 
     def _on_arrive(self, now: float, rid: int) -> None:
         req = self.reqs[rid]
+        if self.tracer.enabled:
+            self.tracer.record(now, "arrive", rid=rid,
+                               track=("request", rid))
         self.policy.on_arrival(now)
         alloc = self.policy.plan(req, self._pool_view(now), now)
         if alloc is None:
             self.rejected.append(rid)
+            if self.tracer.enabled:
+                self.tracer.record(now, "reject", rid=rid,
+                                   track=("request", rid))
             return
         self._commit_plan(now, req, alloc)
 
@@ -353,12 +367,32 @@ class Simulator:
                                                         gen))
         req.prefill_done = now + alloc.ttft
         self._push(req.prefill_done, "prefill_done", (req.rid, gen))
+        if self.tracer.enabled:
+            self.tracer.record(now, "plan", rid=req.rid,
+                               track=("request", req.rid), gen=gen,
+                               n_chunks=len(alloc.chunks),
+                               ttft_sched=alloc.ttft)
 
     def _on_chunk_start(self, now: float, payload) -> None:
         rid, ci, gen = payload
         if gen != self.plan_gen.get(rid):
             return                          # superseded by a requeue
-        self.reqs[rid].chunk_exec.append(now)
+        req = self.reqs[rid]
+        req.chunk_exec.append(now)
+        if self.tracer.enabled:
+            s0, s1 = req.chunk_sched[ci]
+            L, sp = req.chunk_plan[ci]
+            group = (req.chunk_groups[ci]
+                     if ci < len(req.chunk_groups) else ())
+            self.tracer.record(now, "chunk", rid=rid,
+                               track=("prefill",
+                                      group[0] if group else 0),
+                               dur=max(0.0, s1 - s0), chunk=ci, len=L,
+                               sp=sp, group=tuple(group),
+                               sched_start=s0, sched_end=s1)
+            pool = self._pool_view(now)
+            self.metrics.gauge("prefill_backlog_s").set(
+                sum(pool.values()) / max(len(pool), 1), t=now)
 
     def _release_bookings(self, rid: int) -> None:
         """Drop a finished plan's ledger entries (free_at keeps its value;
@@ -392,6 +426,11 @@ class Simulator:
             return                          # superseded by a requeue
         self._release_bookings(rid)
         req = self.reqs[rid]
+        if self.tracer.enabled and req.phase != Phase.TRANSFER:
+            # first completion only: capacity-pressure retries re-fire
+            # this event with the phase already TRANSFER
+            self.tracer.record(now, "prefill_done", rid=rid,
+                               track=("request", rid))
         if not self.spec.disaggregated:
             # LoongServe static batching: decode occupies the SP group
             sp = req.chunk_plan[-1][1]
@@ -412,6 +451,7 @@ class Simulator:
             # static batching: the ESP group is blocked for the whole decode
             for i in req.instances:
                 self.free_at[i] = max(self.free_at[i], req.done)
+            self._trace_finish(req)
             return
         # disaggregated: route to decode instance (Llumnix virtual usage)
         req.phase = Phase.TRANSFER
@@ -431,8 +471,24 @@ class Simulator:
         else:
             d.transfer_queue.append((now, req))
 
+    def _trace_transfer_start(self, now: float, rid: int) -> None:
+        if self.tracer.enabled:
+            self.tracer.record(now, "transfer_begin", rid=rid,
+                               track=("request", rid))
+            self.tracer.begin("transfer", rid, now, track=("request", rid))
+
+    def _trace_finish(self, req: Request) -> None:
+        if self.tracer.enabled:
+            self.tracer.record(req.done, "finish", rid=req.rid,
+                               track=("request", req.rid))
+            self.tracer.end_all(req.rid, req.done)
+            self.metrics.hist("ttft_s").observe(req.ttft)
+            for gap in req.tbts:
+                self.metrics.hist("tbt_s").observe(gap)
+
     def _start_transfer(self, now: float, d: DecodeInstance, req: Request
                         ) -> None:
+        self._trace_transfer_start(now, req.rid)
         dur = (req.prompt_len * self.spec.kv_bytes_per_token
                / self.spec.transfer_bw)
         self._push(now + dur, "transfer_done", req.rid)
@@ -441,6 +497,13 @@ class Simulator:
         req = self.reqs[rid]
         d = self.decodes[req.decode_instance]
         req.transfer_done = now
+        if self.tracer.enabled:
+            self.tracer.end("transfer", rid, now)
+            self.tracer.record(now, "admit", rid=rid,
+                               track=("request", rid),
+                               instance=req.decode_instance)
+            self.tracer.begin("decode_resident", rid, now,
+                              track=("request", rid))
         # release backend to the FIFO queue
         if d.transfer_queue:
             t0, nxt = d.transfer_queue.pop(0)
@@ -466,6 +529,12 @@ class Simulator:
         return self.decode_model.latency(len(d.batch), cache, sp=1,
                                          tp=self.spec.tp_decode)
 
+    def _tick_mode(self, did: int) -> str:
+        """Telemetry tag for the decode step about to run.  The real
+        engine reports "fused" for ticks executing inline inside a
+        colocated prefill chunk's step window."""
+        return "standalone"
+
     def _on_decode_tick(self, now: float, did: int) -> None:
         d = self.decodes[did]
         if not d.batch:
@@ -473,6 +542,14 @@ class Simulator:
             return
         dt = self._tick_latency(d)
         t_next = now + dt
+        if self.tracer.enabled:
+            mode = self._tick_mode(did)
+            self.tracer.record(now, "tick", track=("decode", did), dur=dt,
+                               mode=mode,
+                               rids=tuple(r.rid for r in d.batch))
+            self.metrics.counter(f"ticks/{mode}").inc()
+            self.metrics.gauge(f"decode{did}/batch").set(len(d.batch),
+                                                         t=now)
         finished = []
         for r in d.batch:
             r.generated += 1
@@ -488,7 +565,18 @@ class Simulator:
             d.slots_free += r.cache_tokens
             r.phase = Phase.DONE
             r.done = t_next
+            self._trace_finish(r)
         self._push(t_next, "decode_tick", did)
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """Build (and optionally write) the trace document: Perfetto-
+        loadable ``traceEvents`` plus structured per-request records with
+        TTFT attribution / TBT causes and the metrics snapshot."""
+        doc = telemetry.build_trace_doc(self.tracer, self.reqs,
+                                        self.metrics)
+        if path is not None:
+            telemetry.write_trace(path, doc)
+        return doc
 
 
 # ---------------------------------------------------------------- metrics

@@ -77,6 +77,15 @@ class TransferManager:
                       "demote_bytes": 0.0, "promote_bytes": 0.0,
                       "swaps_out": 0, "swaps_in": 0,
                       "demotes": 0, "promotes": 0}
+        self._metrics = None
+        self._mprefix = ""
+
+    def bind_metrics(self, metrics, prefix: str = "") -> None:
+        """Mirror PCIe swap traffic into a telemetry ``MetricsRegistry``:
+        ``note_swap`` additionally bumps ``<prefix>pcie_<dir>_bytes`` /
+        ``<prefix>pcie_<dir>_moves`` counters."""
+        self._metrics = metrics
+        self._mprefix = prefix
 
     # ------------------------------------------------------- host offload
     def note_swap(self, direction: str, n_bytes: float) -> None:
@@ -91,6 +100,10 @@ class TransferManager:
                "promote": ("promote_bytes", "promotes")}[direction]
         self.stats[key[0]] += n_bytes
         self.stats[key[1]] += 1
+        if self._metrics is not None:
+            p = self._mprefix
+            self._metrics.counter(f"{p}pcie_{direction}_bytes").inc(n_bytes)
+            self._metrics.counter(f"{p}pcie_{direction}_moves").inc()
 
     # ---------------------------------------------------------- handshake
     def handshake(self, rid: int, n_chunks: int, chunk_bytes: List[float],

@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Summarize a serving trace (``trace/v1`` JSON from
+``ServingEngine.export_trace`` / ``Simulator.export_trace``).
+
+Prints a latency percentile table, the per-component TTFT attribution
+breakdown (averaged shares plus the bit-equality check against observed
+TTFT), and a TBT gap-cause histogram — the human-readable counterpart of
+the Perfetto-loadable ``traceEvents`` the same file carries.
+
+Usage:
+    python tools/trace_report.py trace.json
+    python tools/trace_report.py --demo [--export trace.json]
+
+``--demo`` builds a tiny traced run in-process (used by the CI smoke
+step); ``--export`` additionally writes the trace document it analysed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+from repro.serving.telemetry import (ATTRIBUTION_ORDER,  # noqa: E402
+                                     attribution_total)
+
+
+def _percentile(xs, p):
+    if not xs:
+        return math.nan
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, math.ceil(len(xs) * p / 100.0) - 1))
+    return xs[k]
+
+
+def _fmt_s(v):
+    return "     -" if v is None or (isinstance(v, float) and math.isnan(v)) \
+        else f"{v * 1e3:9.2f}ms"
+
+
+def summarize(doc: dict) -> str:
+    """Render the report for one ``trace/v1`` document."""
+    assert doc.get("schema") == "trace/v1", doc.get("schema")
+    reqs = doc.get("requests", {})
+    finished = {rid: r for rid, r in reqs.items()
+                if r.get("prefill_done") is not None}
+    ttfts = [r["ttft"] for r in finished.values()]
+    tbts = [b - a for r in finished.values()
+            for a, b in zip(r["token_times"], r["token_times"][1:])]
+    lines = []
+    lines.append(f"requests: {len(reqs)} total, {len(finished)} finished "
+                 f"prefill; traceEvents: {len(doc.get('traceEvents', []))}")
+    lines.append("")
+    lines.append("latency        p50        p90        p99        max")
+    for name, xs in (("TTFT", ttfts), ("TBT", tbts)):
+        lines.append(f"{name:<8}" + "".join(
+            _fmt_s(_percentile(xs, p)).rjust(11)
+            for p in (50, 90, 99, 100)))
+    lines.append("")
+
+    # TTFT attribution: aggregate component shares + bit-equality audit
+    totals = {k: 0.0 for k in ATTRIBUTION_ORDER}
+    mismatches = 0
+    for r in finished.values():
+        comps = r.get("attribution")
+        if comps is None:
+            continue
+        for k in ATTRIBUTION_ORDER:
+            totals[k] += comps.get(k, 0.0)
+        if attribution_total(comps) != r["ttft"]:
+            mismatches += 1
+    grand = sum(totals.values())
+    lines.append("TTFT attribution (aggregate over finished requests)")
+    for k in ATTRIBUTION_ORDER:
+        share = totals[k] / grand * 100.0 if grand else 0.0
+        lines.append(f"  {k:<16}{totals[k]:10.4f}s  {share:5.1f}%")
+    lines.append(f"  bit-equal sum check: "
+                 f"{'OK' if mismatches == 0 else f'{mismatches} MISMATCHED'}"
+                 f" ({len(finished)} requests)")
+    lines.append("")
+
+    # TBT cause histogram
+    causes: dict = {}
+    for r in finished.values():
+        for c in r.get("tbt_causes", []):
+            causes[c] = causes.get(c, 0) + 1
+    lines.append("TBT gap causes")
+    if causes:
+        n = sum(causes.values())
+        for c, k in sorted(causes.items(), key=lambda kv: -kv[1]):
+            lines.append(f"  {c:<12}{k:6d}  {k / n * 100.0:5.1f}%")
+    else:
+        lines.append("  (no multi-token requests)")
+
+    # headline engine counters, if the run recorded any
+    counters = doc.get("metrics", {}).get("counters", {})
+    interesting = {k: v for k, v in counters.items()
+                   if k.startswith(("ticks/", "restripe/"))
+                   or k.endswith(("_bytes", "_moves"))}
+    if interesting:
+        lines.append("")
+        lines.append("counters")
+        for k, v in sorted(interesting.items()):
+            lines.append(f"  {k:<28}{v:14.0f}")
+    return "\n".join(lines)
+
+
+def _demo_doc() -> dict:
+    """A tiny traced engine run (also the CI smoke path)."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.core.chunk_planner import Allocation, Chunk
+    from repro.core.latency_model import table1_model
+    from repro.models.params import init_params
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+    from repro.serving.simulator import ClusterSpec, Policy
+
+    class TwoChunk(Policy):
+        name = "two_chunk"
+
+        def plan(self, req, pool, now):
+            L = req.prompt_len
+            base = (2 * req.rid) % (self.spec.n_prefill - 1)
+            l0 = L // 2
+            t0 = self.model.latency(1, 0, l0)
+            t1 = self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (base,), 0.0, t0),
+                               Chunk(L - l0, (base, base + 1), t0, t0 + t1)])
+
+    cfg = get_config("yi-9b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    spec = ClusterSpec(n_prefill=8, n_decode=1, sp_candidates=(1, 2, 4))
+    eng = ServingEngine(cfg, params, spec, TwoChunk(table1_model(), spec),
+                        max_batch=4, max_seq=80, block_size=16,
+                        decode_hosts={0: tuple(range(8))}, piggyback=True,
+                        prefill_pool_blocks=64)
+    rng = np.random.default_rng(1)
+    for i, (a, o) in enumerate([(0.0, 4), (0.01, 3), (0.02, 3)]):
+        eng.submit(Request(rid=i, arrival=a, prompt_len=60, output_len=o),
+                   rng.integers(0, cfg.vocab_size, 60))
+    eng.serve()
+    return eng.export_trace()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="?", help="trace/v1 JSON file")
+    ap.add_argument("--demo", action="store_true",
+                    help="build and analyse a tiny in-process engine run")
+    ap.add_argument("--export", metavar="PATH",
+                    help="also write the analysed trace document to PATH")
+    args = ap.parse_args(argv)
+    if args.demo:
+        doc = _demo_doc()
+    elif args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    else:
+        ap.error("need a trace file or --demo")
+    if args.export:
+        from repro.serving.telemetry import write_trace
+        write_trace(args.export, doc)
+    print(summarize(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
