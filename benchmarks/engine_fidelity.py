@@ -31,7 +31,12 @@ measures per-decode-tick KV traffic — the fused append+attend tick vs
 the legacy scatter-then-gather tick, with analytic bytes-moved figures
 for both — and the per-device pool footprint of the head-sharded
 (TP x SP) placement vs the replicated one, timing the fused tick through
-the sharded island on both placements (sentinel row below 4 devices).
+the sharded island on both placements (sentinel row below 4 devices); a
+ninth (``cluster_kv``) serves a skewed two-instance load — a long
+resident owning a shared prefix on one instance, twins arriving on the
+other — with the cluster KV fabric on vs off, reporting the twins'
+recomputed prefill tokens, peer-promotion counts and TTFT (tokens must
+match bit-for-bit; the fabric only moves KV, never changes it).
 
 CI runs this via ``run.py --quick --only engine_fidelity --json`` and
 uploads the stable-schema ``BENCH_engine.json`` it writes at the repo
@@ -363,6 +368,61 @@ def run(quick: bool = False):
         restripe_row = fmt_row("engine.restripe_vs_drain", 0.0,
                                "stall=na|migrated=na|match=na")
 
+    # --- cluster KV fabric segment: skewed two-instance load.  A long
+    # resident holds a 96-token prefix on instance 0 while two twins
+    # sharing that prefix arrive and route to instance 1 — the skew the
+    # cluster fabric exists for.  Fabric OFF, each twin re-prefills its
+    # whole prompt (the chain lives only in the peer's decode pool);
+    # fabric ON, admission promotes the peer-resident chain over the
+    # interconnect and the planner skips those tokens — fewer
+    # recomputed prefill tokens, earlier TTFT, identical outputs.
+    ck_rng = np.random.default_rng(53)
+    ck_base = ck_rng.integers(0, cfg.vocab_size, 104).astype(np.int32)
+    ck_twins = []
+    for _ in range(2):
+        tw = ck_base.copy()
+        tw[96:] = ck_rng.integers(0, cfg.vocab_size, 8)
+        ck_twins.append(tw)
+
+    def serve_cluster(fabric, arrival):
+        s = ClusterSpec(n_prefill=16, n_decode=2,
+                        sp_candidates=(1, 2, 4, 8))
+        e = ServingEngine(cfg, params, s,
+                          _ParallelPolicy(table1_model(), s),
+                          max_batch=2, max_seq=256, block_size=16,
+                          fabric=fabric)
+        e.submit(Request(rid=0, arrival=0.0, prompt_len=104,
+                         output_len=60), ck_base)
+        for i, tw in enumerate(ck_twins, start=1):
+            e.submit(Request(rid=i, arrival=arrival, prompt_len=104,
+                             output_len=8), tw)
+        t0 = time.perf_counter()
+        out = e.serve()
+        return e, out, time.perf_counter() - t0
+
+    # timing probe: twins arrive two decode ticks into rid 0's residency
+    probe, _, _ = serve_cluster("off", 30.0)
+    ck_at = probe.reqs[0].token_times[2]
+    ck_off, ck_off_out, _ = serve_cluster("off", ck_at)
+    ck_on, ck_on_out, ck_wall = serve_cluster("auto", ck_at)
+
+    def _twin_pretok(e):
+        return sum(c[0] for r in (1, 2) for c in e.reqs[r].chunk_plan)
+
+    pre_on, pre_off = _twin_pretok(ck_on), _twin_pretok(ck_off)
+    ck_ttft_on = _mean([ck_on.reqs[r].ttft for r in (1, 2)])
+    ck_ttft_off = _mean([ck_off.reqs[r].ttft for r in (1, 2)])
+    ck_fab = ck_on.swap_stats.get("fabric", {})
+    ck_match = all(ck_on_out[r] == ck_off_out[r] for r in ck_off_out)
+    ck_toks = sum(len(t) for t in ck_on_out.values())
+    print(f"cluster fabric: twin prefill tokens {pre_on} vs {pre_off} "
+          f"fabric-off | peer promotions "
+          f"{ck_fab.get('peer_promotions', 0)} "
+          f"({ck_fab.get('peer_promoted_blocks', 0)} blocks, "
+          f"{ck_fab.get('interconnect_bytes', 0) / 2**20:.2f} MiB "
+          f"interconnect) | twin TTFT {ck_ttft_on:.3f}s vs "
+          f"{ck_ttft_off:.3f}s | outputs match fabric-off: {ck_match}")
+
     # --- donated page-write micro-benchmark: per-tick pool update cost.
     # scatter_kv_token/scatter_kv_chunk/copy_kv_blocks donate their pool
     # argument, so XLA aliases the buffer in place instead of rebuilding
@@ -554,6 +614,11 @@ def run(quick: bool = False):
                          for k in ATTRIBUTION_ORDER)
                 + f"|bitexact={int(att_exact)}|causes={cause_s}"),
         restripe_row,
+        fmt_row("engine.cluster_kv", ck_wall * 1e6 / max(ck_toks, 1),
+                f"pretok_on={pre_on}|pretok_off={pre_off}"
+                f"|promos={ck_fab.get('peer_promotions', 0)}"
+                f"|ttft_on={ck_ttft_on:.3f}|ttft_off={ck_ttft_off:.3f}"
+                f"|match={int(ck_match)}"),
         fmt_row("engine.page_scatter_us", scat_us, f"{pool_mb:.1f}MB_pool"),
         fmt_row("engine.kernel_traffic_tick_us", fu_us,
                 f"sg_us={sg_us:.1f}|fused_kib={fu_kib:.0f}"

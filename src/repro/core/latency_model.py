@@ -178,6 +178,29 @@ class HostOffloadModel:
         return self.base + n_bytes / self.pcie_bw
 
 
+@dataclass(frozen=True)
+class InterconnectModel:
+    """Device-to-device interconnect cost model for cross-instance KV
+    block movement (the cluster KV fabric tier, serving/kv_fabric.py).
+
+    Where ``HostOffloadModel`` prices the PCIe hop to host memory, this
+    prices the direct accelerator interconnect between two decode
+    instances — ICI on TPU pods, NVLink/IB on GPU clusters.  The fabric
+    adds this term whenever KV pages cross an instance boundary: a swap
+    victim resuming on a non-origin instance, a peer-resident prefix
+    chain promoted into another pool's pages.  Defaults are TPU v5e ICI
+    effective bandwidth with a small per-transfer launch cost (collective
+    setup), deliberately cheaper than the PCIe hop so placement prefers
+    staying on-fabric over bouncing through the host.
+    """
+    link_bw: float = 50e9        # bytes/s, effective device<->device
+    base: float = 5e-5           # s per transfer (collective launch)
+
+    def transfer_time(self, n_bytes: float) -> float:
+        """Seconds to move ``n_bytes`` of KV across the interconnect."""
+        return self.base + n_bytes / self.link_bw
+
+
 # ------------------------------------------------------------------ decode
 # Fig. 2 calibration: decode step latency multipliers vs (SP1, TP8).
 FIG2_TP_MULT = {8: 1.0, 4: 1.93, 2: 3.87, 1: 5.73}       # Fig. 2-(a)

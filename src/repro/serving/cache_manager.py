@@ -216,6 +216,11 @@ class BlockManager:
                        (s + 1) * self.blocks_per_shard))
             for s in range(self.kv_shards)]
         self._virt_shard: List[int] = [0] * self.kv_shards
+        # cluster-fabric leases: blocks lent to a borrowing instance are
+        # pulled off the free lists (never allocatable here until
+        # recalled) and tracked per lease id — see grant_lease/recall
+        self.leases: Dict[int, List[int]] = {}
+        self._next_lease = 0
         self._metrics = None                # telemetry registry (optional)
         self._mprefix = ""
 
@@ -533,6 +538,49 @@ class BlockManager:
         self.stats["cow"] += 1
         self._sample()
         return b, new
+
+    # ------------------------------------------------- fabric page leases
+    @property
+    def leased_blocks(self) -> int:
+        """Blocks currently lent out to borrowing instances."""
+        return sum(len(bs) for bs in self.leases.values())
+
+    def grant_lease(self, n_blocks: int) -> Optional[int]:
+        """Lend ``n_blocks`` free blocks to the cluster fabric.
+
+        The blocks are popped off the free lists — striped like any
+        allocation so the per-shard invariant stays exact — and parked
+        under a lease id until ``recall_lease`` returns them.  A leased
+        block is neither free nor allocated: it carries no refcount and
+        no hash, and ``effective_free``/``can_fit`` see the shrunken free
+        lists directly, so the donor's own admission, growth and
+        watermark math never double-counts lent capacity.  Returns None
+        when the take would dip into blocks promised to pending virtual
+        reservations (the donor's in-flight transfers outrank lending).
+        """
+        if n_blocks <= 0 or not self.can_fit(n_blocks * self.block_size):
+            return None
+        need = self._stripe_need(n_blocks, 0)
+        blocks = []
+        for s in range(self.active_shards):
+            for _ in range(need[s]):
+                blocks.append(self.shard_free[s].pop())
+        lid = self._next_lease
+        self._next_lease += 1
+        self.leases[lid] = blocks
+        self._sample()
+        return lid
+
+    def recall_lease(self, lid: int) -> int:
+        """Return a lease's blocks to their shards' free lists; the blocks
+        are untouched while lent (no refcount, no hash), so recall is pure
+        accounting.  Returns the number of blocks recalled."""
+        blocks = self.leases.pop(lid)
+        for b in blocks:
+            assert b not in self.ref, f"leased block {b} was allocated"
+            self.shard_free[self.shard_of(b)].append(b)
+        self._sample()
+        return len(blocks)
 
     # ------------------------------------------------- elastic restriping
     def _migrations(self, new_n: int) -> List[Tuple[int, int]]:

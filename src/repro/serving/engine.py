@@ -81,12 +81,14 @@ import numpy as np
 
 from repro.core.cdsp import prefill_chunk_paged
 from repro.core.improvement_rate import DynamicRateController
-from repro.core.latency_model import DecodeLatencyModel, HostOffloadModel
+from repro.core.latency_model import (DecodeLatencyModel, HostOffloadModel,
+                                      InterconnectModel)
 from repro.models.config import ModelConfig
 from repro.models.sharding import CPU_CTX, ExecContext
 from repro.models.transformer import forward
 from repro.serving.cache_manager import (BlockManager, PagedKVCache,
                                          block_hashes)
+from repro.serving.kv_fabric import KVFabric
 from repro.serving.kv_offload import (HostKVPool, HostPrefixCache,
                                       SwapManager, SwapRecord,
                                       choose_preempt_policy)
@@ -405,6 +407,8 @@ class ServingEngine(Simulator):
                  preempt_policy: str = "auto",
                  host_pool_blocks: Optional[int] = None,
                  offload_model: Optional[HostOffloadModel] = None,
+                 fabric: Optional[str] = "auto",
+                 interconnect: Optional[InterconnectModel] = None,
                  decode_hosts: Optional[Dict[int, tuple]] = None,
                  piggyback: bool = True,
                  decode_budget: Optional[int] = None,
@@ -417,6 +421,10 @@ class ServingEngine(Simulator):
             raise ValueError(
                 f"preempt_policy must be 'auto', 'swap' or 'recompute', "
                 f"got {preempt_policy!r}")
+        if fabric not in ("auto", "on", "off", None):
+            raise ValueError(
+                f"fabric must be 'auto', 'on', 'off' or None, "
+                f"got {fabric!r}")
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
@@ -465,29 +473,44 @@ class ServingEngine(Simulator):
         self.pblocks = BlockManager(total_blocks=prefill_pool_blocks,
                                     block_size=block_size, kv_shards=n_sp,
                                     kv_head_shards=self.pkv.kv_head_shards)
-        # host offload tier: numpy mirror pool shared by swap records and
-        # the LRU second-tier prefix cache; demotions hook BlockManager
-        # releases per decode instance
+        # cluster KV fabric (serving/kv_fabric.py): owns the host tier —
+        # numpy mirror pool shared by swap records and the LRU second-tier
+        # prefix cache — plus the registry of every decode instance's
+        # block books, and the cross-instance behaviors (placed swap-in,
+        # page borrow/lend, peer prefix promotion).  ``fabric="auto"``
+        # turns those on exactly when there is more than one decode
+        # instance; a single-instance engine (or fabric="off"/None)
+        # degenerates to the instance-local paths bit-for-bit.  The
+        # engine keeps host/host_cache/swap as aliases of the
+        # fabric-owned objects so every established code path reads
+        # unchanged.
         if host_pool_blocks is None:
             host_pool_blocks = max_batch * max_seq // block_size
-        if host_pool_blocks > 0:
-            self.host = HostKVPool(cfg, host_pool_blocks, block_size,
-                                   dtype=cfg.dtype)
-            self.host_cache = HostPrefixCache(self.host)
-            self.swap = SwapManager(self.host,
-                                    offload_model or HostOffloadModel(),
-                                    spec.kv_bytes_per_token)
+        cross = (spec.n_decode > 1 if fabric == "auto" else fabric == "on")
+        self.fabric = KVFabric(cfg, spec, block_size, host_pool_blocks,
+                               offload_model=offload_model,
+                               interconnect=interconnect,
+                               cross_instance=cross)
+        self.host = self.fabric.host
+        self.host_cache = self.fabric.host_cache
+        self.swap = self.fabric.swap
+        for did, (d, inst) in enumerate(zip(self.dstates, self.decodes)):
+            self.fabric.register_instance(did, d, inst)
+        if self.swap is not None:
             for did, d in enumerate(self.dstates):
                 d.blocks.demote_cb = functools.partial(
                     self._demote_blocks, did)
-        else:
-            if preempt_policy == "swap":
-                raise ValueError(
-                    "preempt_policy='swap' needs a host tier; set "
-                    "host_pool_blocks > 0")
-            self.host = None
-            self.host_cache = None
-            self.swap = None
+        elif preempt_policy == "swap":
+            raise ValueError(
+                "preempt_policy='swap' needs a host tier; set "
+                "host_pool_blocks > 0")
+        if self.fabric.cross_instance:
+            # instances advertise block-level memory headroom to the
+            # router: freeness ranking caps the token view at what the
+            # striped pool can actually commit
+            for d, inst in zip(self.dstates, self.decodes):
+                inst.headroom_fn = (
+                    lambda bm=d.blocks: bm.effective_free() * block_size)
         self._suppress_demote = False       # during swap-out evictions
         self._demote_gathers = 0            # batched device->host reads
         self._prefill: Dict[int, _PrefillState] = {}
@@ -538,6 +561,10 @@ class ServingEngine(Simulator):
             d.transfers.bind_metrics(self.metrics, f"decode{did}/")
         if self.host_cache is not None:
             self.host_cache.bind_metrics(self.metrics, "host_cache/")
+        if self.fabric.cross_instance:
+            # fabric counters registered only when the cluster behaviors
+            # are live: single-instance metric snapshots stay identical
+            self.fabric.bind_metrics(self.metrics, "fabric/")
         if rate_controller is not None:
             own = getattr(policy, "controller", None)
             if own is not None and own is not rate_controller:
@@ -624,20 +651,40 @@ class ServingEngine(Simulator):
         return self._resume_seq.get(rid, self.prompts[rid])
 
     def _host_prefix_skip(self, rid: int) -> int:
-        """Prompt-prefix tokens the host prefix cache can serve without
-        prefilling them (side-effect-free peek): whole cached blocks,
-        capped so at least one token always runs through the prefill
-        (the final chunk's logits seed decode).  The planner prices the
-        remainder as chunks over this much pre-existing history and the
-        first chunk start promotes the pages (``_promote_host_prefix``)."""
+        """Prompt-prefix tokens the two-tier prefix cache can serve
+        without prefilling them (side-effect-free peek): whole cached
+        blocks, capped so at least one token always runs through the
+        prefill (the final chunk's logits seed decode).  The planner
+        prices the remainder as chunks over this much pre-existing
+        history and the first chunk start promotes the pages
+        (``_promote_host_prefix``).  With the cluster fabric, the chain
+        continues past the host-cache run across *peer* device pools —
+        cost-gated (``_peer_copy_wins``): peer pages copy over the
+        interconnect only when that beats re-prefilling them."""
         if self.host_cache is None or not self.prefix_sharing:
             return 0
         seq = np.asarray(self._prefill_seq(rid))
         bs = self.pblocks.block_size
         hashes = block_hashes(seq, bs)
         hits = self.host_cache.match_chain(hashes, seq, 0, bs, peek=True)
+        n = len(hits)
+        if self.fabric.cross_instance:
+            _, peer = self.fabric.match_peer_chain(None, hashes[n:], seq, n)
+            if peer and self._peer_copy_wins(len(peer)):
+                n += len(peer)
         cap = (len(seq) - 1) // bs
-        return min(len(hits), cap) * bs
+        return min(n, cap) * bs
+
+    def _peer_copy_wins(self, n_blocks: int) -> bool:
+        """``choose_preempt_policy``-style cost gate for peer prefix
+        promotion: copy ``n_blocks`` pages across the interconnect only
+        when the modeled transfer undercuts the modeled prefill (Eq. 1,
+        best SP) of the tokens they cover — otherwise recompute is
+        cheaper and the chain ends at the host run."""
+        L = max(n_blocks * self.pblocks.block_size, 1)
+        rec_s = self.policy.model.latency(
+            self.policy.model.optimal_sp(L), 0.0, L)
+        return self.fabric.peer_copy_cost(n_blocks) < rec_s
 
     def _on_arrive(self, now: float, rid: int) -> None:
         self._price_piggyback(now)
@@ -795,7 +842,15 @@ class ServingEngine(Simulator):
         bs = self.pblocks.block_size
         hashes = block_hashes(np.asarray(seq[:skip]), bs)
         promo = self.host_cache.match_chain(hashes, seq, 0, bs)
-        if len(promo) * bs < skip:
+        peer_did, peer = None, []
+        if len(promo) * bs < skip and self.fabric.cross_instance:
+            # the planned skip ran past the host tier into a peer pool:
+            # re-match the peer continuation (it may have been evicted
+            # since planning, like the host entries)
+            peer_did, peer = self.fabric.match_peer_chain(
+                None, hashes[len(promo):], seq, len(promo))
+            peer = peer[:skip // bs - len(promo)]
+        if (len(promo) + len(peer)) * bs < skip:
             self._restart_prefill(now, rid)
             return False
         self.pblocks.open(rid)
@@ -804,7 +859,17 @@ class ServingEngine(Simulator):
             self._prefill_backpressure(now, rid, payload)
             return False
         blocks = self.pblocks.allocs[rid]
-        self.pkv.copy_from(self.host, promo[:len(blocks)], blocks)
+        promo = promo[:len(blocks)]
+        self.pkv.copy_from(self.host, promo, blocks[:len(promo)])
+        if peer:
+            # peer-resident continuation: one batched gather out of the
+            # peer's pool, scattered into the prefill pages through the
+            # same positional copy path host promotions use
+            src = self.fabric.peer_pages(peer_did, peer)
+            self.pkv.copy_from(src, range(len(peer)),
+                               blocks[len(promo):len(promo) + len(peer)])
+            self.fabric.note_peer_promotion(
+                peer_did, self.dstates[peer_did].transfers, len(peer))
         self.planner_promotions += len(blocks)
         st.off = skip
         return True
@@ -1087,13 +1152,34 @@ class ServingEngine(Simulator):
         # verdict is actually decided by the compare
         cached = (self._host_cached_tokens(d, rid)
                   if self.preempt_policy == "auto" else 0)
+        # destination congestion (fabric engines only, keeping the
+        # single-instance preempt_log byte-identical): a swap-in resumes
+        # into a live batch, so its first token back also waits one tick
+        # per already-resident request — without this term a swap into a
+        # saturated instance beats recompute on paper while losing on
+        # observed TTFT
+        qd, qms = 0, 0.0
+        if self.fabric.cross_instance:
+            did = req.decode_instance
+            qd = max(0, len(self.decodes[did].batch) - 1)
+            qms = self._queue_tick_s(did) * 1e3
         policy, swap_ms, rec_ms = choose_preempt_policy(
             len(d.meta[rid].blocks), d.block_size,
             self.spec.kv_bytes_per_token, resume,
-            self.policy.model, self.swap.model, cached_tokens=cached)
+            self.policy.model, self.swap.model, cached_tokens=cached,
+            queue_depth=qd, queue_ms=qms)
         if self.preempt_policy != "auto":
             policy = self.preempt_policy
         return policy, swap_ms, rec_ms, resume
+
+    def _queue_tick_s(self, did: int) -> float:
+        """Modeled seconds of one decode tick on instance ``did``'s
+        current batch — the unit of the destination queue-depth term in
+        swap-in placement and the ``auto`` policy compare."""
+        inst = self.decodes[did]
+        cache = sum(r.cache_tokens for r in inst.batch)
+        return self.decode_model.latency(max(len(inst.batch), 1), cache,
+                                         sp=1, tp=self.spec.tp_decode)
 
     def _preempt_decode(self, now: float, rid: int, reason: str) -> None:
         """Preempt a decode-resident request under memory pressure (or a
@@ -1249,9 +1335,10 @@ class ServingEngine(Simulator):
         self.swap.records[rid] = SwapRecord(
             rid=rid, did=did, host_blocks=hblocks,
             cache_len=meta.cache_len, last_token=meta.last_token,
-            tokens=meta.tokens, aux=aux)
+            tokens=meta.tokens, aux=aux, origin_did=did)
         n_bytes = self.swap.block_bytes(n)
         self.swap.counters["swap_outs"] += 1
+        self.fabric.note_swap_out(did)
         self.swap.counters["bytes_out"] += n_bytes
         d.transfers.note_swap("out", n_bytes)
         self.tracer.end("decode_resident", rid, now)
@@ -1274,9 +1361,31 @@ class ServingEngine(Simulator):
         reservation (BlockManager.reserve_virtual) spans the PCIe flight,
         and resident growth honours it (``extend`` subtracts virtual
         blocks) — but may reclaim it via ``_cancel_pending_swap_ins`` when
-        the pool tightens, sending this request back to retrying."""
+        the pool tightens, sending this request back to retrying.
+
+        **Placed swap-in** (cluster fabric): before claiming anything,
+        the fabric scores every instance as a resume target — modeled
+        PCIe + interconnect (off-origin) + destination queue depth — and
+        the record migrates to the winner: the parked request resumes on
+        a different instance token-for-token (greedy decode depends only
+        on its own cache).  The origin's ``swapped_tokens`` gauge moves
+        with it; start/done book their usual inverses on the new
+        instance."""
         rec = self.swap.records[rid]
         req = self.reqs[rid]
+        if self.fabric.cross_instance:
+            tgt = self.fabric.best_resume_target(
+                rec, self._watermark_blocks, self._queue_tick_s)
+            if tgt is not None and tgt != rec.did:
+                self.decodes[rec.did].swapped_tokens -= rec.cache_len
+                self.decodes[tgt].swapped_tokens += rec.cache_len
+                self.tracer.record(now, "swap_place", rid=rid,
+                                   track=("request", rid),
+                                   entry={"t": now, "rid": rid,
+                                          "origin": rec.did,
+                                          "target": tgt})
+                rec.did = tgt
+                req.decode_instance = tgt
         d, inst = self.dstates[rec.did], self.decodes[rec.did]
         need = d.blocks.blocks_for(rec.cache_len)
         # land only with watermark headroom to spare (capped at the pool:
@@ -1347,6 +1456,7 @@ class ServingEngine(Simulator):
         if shared_tok:
             inst.credit_shared(shared_tok)
         self.swap.counters["swap_ins"] += 1
+        self.fabric.note_swap_in(rec)
         self.tracer.end("swap", rid, now)
         self.tracer.record(now, "swap_in_done", rid=rid,
                            track=("request", rid),
@@ -1406,7 +1516,14 @@ class ServingEngine(Simulator):
     def swap_stats(self) -> Dict[str, float]:
         """Host-offload tier counters: swap round trips and bytes, parked
         requests, recompute fallbacks, host pool occupancy, and the
-        second-tier prefix cache's demotions/hits/evictions."""
+        second-tier prefix cache's demotions/hits/evictions.  With the
+        cluster fabric active (``n_decode > 1`` under ``fabric="auto"``,
+        or ``fabric="on"``) two extra keys appear: ``"fabric"`` — the
+        cluster-wide counters (placed vs pinned swap-ins, lease traffic,
+        peer promotions, interconnect bytes) — and ``"per_instance"`` —
+        the same activity broken down by decode instance id.  Neither
+        key exists single-instance, keeping the dict byte-identical to
+        the pre-fabric engine there."""
         out = {"swap_outs": 0, "swap_ins": 0, "bytes_out": 0.0,
                "bytes_in": 0.0, "fallback_recompute": 0, "swapped_now": 0,
                "swap_in_shared_blocks": 0, "demote_gathers": 0,
@@ -1414,6 +1531,10 @@ class ServingEngine(Simulator):
                "demotions": 0, "host_prefix_hits": 0, "cache_evictions": 0,
                "planner_promotions": 0}
         if self.swap is None:
+            if self.fabric.cross_instance:
+                out["fabric"] = dict(self.fabric.counters)
+                out["per_instance"] = {did: dict(st) for did, st
+                                       in self.fabric.per_instance.items()}
             return out
         out.update(self.swap.counters)
         out["demote_gathers"] = self._demote_gathers
@@ -1425,6 +1546,10 @@ class ServingEngine(Simulator):
         out["demotions"] = self.host_cache.stats["demotions"]
         out["host_prefix_hits"] = self.host_cache.stats["hits"]
         out["cache_evictions"] = self.host_cache.stats["evictions"]
+        if self.fabric.cross_instance:
+            out["fabric"] = dict(self.fabric.counters)
+            out["per_instance"] = {did: dict(st) for did, st
+                                   in self.fabric.per_instance.items()}
         return out
 
     @property
@@ -1461,12 +1586,18 @@ class ServingEngine(Simulator):
         shares with it), and preempting it could never help."""
         d = self.dstates[did]
         bm = d.blocks
+        fab = self.fabric if self.fabric.cross_instance else None
         for rid in [r for r in d.slots
                     if r is not None and r in d.meta
                     and r in self._decode_preempt_flags]:
             self._decode_preempt_flags.discard(rid)
             self._preempt_decode(now, rid, reason="manual")
         wm = self._watermark_blocks(d)
+        if fab is not None and fab.credit(did):
+            # borrower pressure subsided: once this instance clears its
+            # own (uncredited) watermark with room to spare, hand the
+            # leases back so donors regain their blocks
+            fab.release_borrowed(did, max(0, bm.effective_free() - wm))
         order = sorted(d.meta, key=lambda r: (self.reqs[r].arrival, r))
         for rid in order:
             if rid not in d.meta:
@@ -1484,6 +1615,11 @@ class ServingEngine(Simulator):
                 resident = [r for r in d.slots
                             if r is not None and r in d.meta]
                 floor = wm if len(resident) > 1 else 0
+                if fab is not None:
+                    # borrowed leases credit the watermark floor: the
+                    # headroom the watermark reserves now lives on the
+                    # donor (physically off its free lists)
+                    floor = max(0, floor - fab.credit(did))
                 # growth sees only blocks not promised to an in-flight
                 # swap-in; reclaim those reservations before anyone falls.
                 # ``fits`` is the per-shard exact check — a striped pool
@@ -1496,6 +1632,19 @@ class ServingEngine(Simulator):
                 if ((not fits or eff - need < floor)
                         and self._cancel_pending_swap_ins(did)):
                     continue
+                if fab is not None and (not fits or eff - need < floor):
+                    # cluster pressure valves, in escalation order: take
+                    # back anything this instance lent out (lent headroom
+                    # outranks preempting a resident here), then — when
+                    # the shortfall is watermark-only, never physical
+                    # exhaustion — borrow the missing floor from a donor
+                    if fab.recall_from_donor(did):
+                        continue
+                    if fits and eff - need >= 0:
+                        short = floor - (eff - need)
+                        if short > 0 and fab.borrow(
+                                did, short, self._watermark_blocks):
+                            continue
                 if len(resident) <= 1 or (fits and eff - need >= floor):
                     # a lone resident may dip below the watermark; its
                     # worst case is pool-bounded by submit(), so a failed
@@ -1695,3 +1844,10 @@ class ServingEngine(Simulator):
             if meta.shared_tokens:
                 inst.debit_shared(meta.shared_tokens)
             self._decode_preempt_flags.discard(rid)
+        if (finished_before and self.fabric.cross_instance
+                and self.fabric.credit(did)):
+            # a finishing resident freed real blocks: give borrowed
+            # watermark headroom back to its donors
+            self.fabric.release_borrowed(
+                did, max(0, d.blocks.effective_free()
+                         - self._watermark_blocks(d)))

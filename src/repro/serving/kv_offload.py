@@ -110,7 +110,8 @@ def choose_preempt_policy(
         n_blocks: int, block_size: int, kv_bytes_per_token: float,
         resume_tokens: int, prefill_model: PrefillLatencyModel,
         offload_model: HostOffloadModel,
-        cached_tokens: int = 0) -> Tuple[str, float, float]:
+        cached_tokens: int = 0, queue_depth: int = 0,
+        queue_ms: float = 0.0) -> Tuple[str, float, float]:
     """The ``auto`` preemption policy's per-victim cost compare.
 
     Returns ``(policy, swap_in_ms, recompute_ms)``: the modeled PCIe time
@@ -126,9 +127,19 @@ def choose_preempt_policy(
     estimate prices only the uncached remainder's prefill plus the PCIe
     promotion of the cached pages — without this discount ``auto``
     over-prefers swap exactly for the victims whose prefix survived an
-    earlier eviction."""
+    earlier eviction.
+
+    ``queue_depth`` × ``queue_ms`` is the destination congestion term:
+    a swap-in resumes into a live decode batch, so the victim's first
+    token back waits on the destination's already-resident ticks — the
+    raw PCIe price alone makes a swap into a saturated instance beat
+    recompute on paper while losing on observed TTFT.  The engine feeds
+    the resume target's batch depth and its modeled per-tick latency;
+    recompute re-enters through admission routing, which already picks
+    the freest instance, so only the swap side pays."""
     n_bytes = n_blocks * block_size * kv_bytes_per_token
     swap_ms = offload_model.swap_time(n_bytes) * 1e3
+    swap_ms += max(queue_depth, 0) * queue_ms
     cached = min(max(cached_tokens, 0), resume_tokens)
     L = max(resume_tokens - cached, 1)
     rec_ms = prefill_model.latency(
@@ -157,6 +168,10 @@ class SwapRecord:
     row: Optional[int] = None        # batch row claimed by an in-flight
     #                                  swap-in (None while parked / when a
     #                                  resident's growth cancels the claim)
+    origin_did: Optional[int] = None  # instance the victim swapped out of;
+    #                                   with the KV fabric, ``did`` may be
+    #                                   re-pointed at a better resume
+    #                                   target ("placed" vs "pinned")
 
 
 class SwapManager:

@@ -221,9 +221,16 @@ class DecodeInstance:
     standalone_ticks: int = 0
     standalone_tokens: int = 0
     deferred_ticks: int = 0
+    # cluster KV fabric hook: when set (engine, multi-instance only) the
+    # instance advertises its *physical* paged-pool headroom in tokens so
+    # routing sees lease-shrunken free lists, not just the slot ledger
+    headroom_fn: Optional[Callable[[], int]] = None
 
     def freeness(self) -> float:
-        return (self.slots_free - self.virtual) / (len(self.batch) + 1.0)
+        free = self.slots_free - self.virtual
+        if self.headroom_fn is not None:
+            free = min(free, self.headroom_fn())
+        return free / (len(self.batch) + 1.0)
 
     def credit_shared(self, tokens: int) -> None:
         """Admitted tokens served by a sibling's blocks consume no new

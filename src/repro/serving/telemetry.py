@@ -20,8 +20,13 @@ all report through:
   histograms sampled at event boundaries (TTFT, TBT, queue depth,
   per-shard free blocks / ``effective_free``, swap PCIe bytes, piggyback
   vs deferred ticks, restripe stall ticks).  ``cache_manager``,
-  ``transfer`` and ``kv_offload`` bind into a registry via their
-  ``bind_metrics`` hooks.
+  ``transfer``, ``kv_offload`` and ``kv_fabric`` bind into a registry
+  via their ``bind_metrics`` hooks.  The cluster KV fabric's canonical
+  metric names live in ``FABRIC_METRICS`` (``fabric/swap_in_placed``,
+  ``fabric/swap_in_pinned``, ``fabric/leases_active``, ...): counters
+  for placed vs pinned swap-in resumes, lease grants/recalls, peer
+  prefix promotions and interconnect bytes, plus a ``leases_active``
+  gauge sampled on every grant/recall.
 
 * **TTFT/TBT attribution** — ``Tracer.attribution`` decomposes a
   request's TTFT into queueing + chunk compute + transfer +
@@ -51,10 +56,28 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 __all__ = [
-    "ATTRIBUTION_ORDER", "Counter", "Gauge", "Histogram",
-    "MetricsRegistry", "OpProfiler", "TraceEvent", "Tracer",
+    "ATTRIBUTION_ORDER", "Counter", "FABRIC_METRICS", "Gauge",
+    "Histogram", "MetricsRegistry", "OpProfiler", "TraceEvent", "Tracer",
     "attribution_total", "build_trace_doc", "exact_remainder",
 ]
+
+# Canonical metric names published by the cluster KV fabric
+# (serving/kv_fabric.py, bound under the "fabric/" prefix).  All are
+# counters except ``leases_active``, a gauge sampled at every lease
+# grant/recall.  Consumers (dashboards, the rollup-audit tests) should
+# reference these instead of re-spelling the strings.
+FABRIC_METRICS = (
+    "fabric/swap_in_placed",      # swap victims resumed on a non-origin did
+    "fabric/swap_in_pinned",      # swap victims resumed where they left
+    "fabric/leases_out",          # page leases granted donor -> borrower
+    "fabric/leases_recalled",     # leases returned (pressure or release)
+    "fabric/lease_blocks_out",    # blocks moved off donors' free lists
+    "fabric/lease_blocks_recalled",
+    "fabric/peer_promotions",     # prefix chains copied from a peer pool
+    "fabric/peer_promoted_blocks",
+    "fabric/interconnect_bytes",  # device-to-device bytes, all causes
+    "fabric/leases_active",       # gauge: leases currently outstanding
+)
 
 
 # ---------------------------------------------------------------- metrics

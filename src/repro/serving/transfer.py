@@ -76,7 +76,16 @@ class TransferManager:
                       "swap_out_bytes": 0.0, "swap_in_bytes": 0.0,
                       "demote_bytes": 0.0, "promote_bytes": 0.0,
                       "swaps_out": 0, "swaps_in": 0,
-                      "demotes": 0, "promotes": 0}
+                      "demotes": 0, "promotes": 0,
+                      # cluster KV fabric interconnect traffic: placed =
+                      # swap victim's pages landing on a non-origin
+                      # instance, peer_promote = a peer-resident prefix
+                      # chain copied across instances, lease = the
+                      # borrow/lend control handshake
+                      "ic_placed_bytes": 0.0, "ic_peer_promote_bytes": 0.0,
+                      "ic_lease_bytes": 0.0,
+                      "ic_placed_moves": 0, "ic_peer_promote_moves": 0,
+                      "ic_lease_moves": 0}
         self._metrics = None
         self._mprefix = ""
 
@@ -104,6 +113,25 @@ class TransferManager:
             p = self._mprefix
             self._metrics.counter(f"{p}pcie_{direction}_bytes").inc(n_bytes)
             self._metrics.counter(f"{p}pcie_{direction}_moves").inc()
+
+    def note_interconnect(self, direction: str, n_bytes: float) -> None:
+        """Account one device-to-device interconnect move of the cluster
+        KV fabric.  ``direction`` is ``"placed"`` (swap victim resuming
+        on a non-origin instance), ``"peer_promote"`` (a peer-resident
+        prefix chain copied into this pool) or ``"lease"`` (page
+        borrow/lend handshake traffic).  Like ``note_swap``, only the
+        bytes are recorded — the transfer *latency* lives on the
+        engine's event clock via ``InterconnectModel``."""
+        key = {"placed": ("ic_placed_bytes", "ic_placed_moves"),
+               "peer_promote": ("ic_peer_promote_bytes",
+                                "ic_peer_promote_moves"),
+               "lease": ("ic_lease_bytes", "ic_lease_moves")}[direction]
+        self.stats[key[0]] += n_bytes
+        self.stats[key[1]] += 1
+        if self._metrics is not None:
+            p = self._mprefix
+            self._metrics.counter(f"{p}ic_{direction}_bytes").inc(n_bytes)
+            self._metrics.counter(f"{p}ic_{direction}_moves").inc()
 
     # ---------------------------------------------------------- handshake
     def handshake(self, rid: int, n_chunks: int, chunk_bytes: List[float],

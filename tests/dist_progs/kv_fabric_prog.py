@@ -1,0 +1,163 @@
+"""Subprocess: the cluster KV memory fabric on a 4-device mesh.
+
+Two decode instances, both with 4-way striped paged pools, exercise the
+fabric's three capabilities under real sharding:
+
+* placed swap-in — a victim swap-preempted off instance 0 resumes on
+  instance 1 while a later arrival holds its origin slot;
+* page borrow/lend — an instance short of its watermark floor borrows
+  headroom from an idle donor instead of preempting a resident;
+* peer prefix promotion — a twin admitted to instance 1 promotes a
+  96-token prefix chain resident on instance 0 over the interconnect
+  (read_blocks gather out of one striped pool, copy_from scatter into
+  the striped prefill pool).
+
+Every scenario must stay token-for-token identical to the dense
+autoregressive oracle."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.chunk_planner import Allocation, Chunk
+from repro.core.latency_model import HostOffloadModel, table1_model
+from repro.models.params import init_params
+from repro.models.sharding import CPU_CTX, ExecContext
+from repro.models.transformer import forward
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec, Policy
+
+assert jax.device_count() == 4, jax.device_count()
+MODEL = table1_model()
+
+
+class ParallelTwoChunkPolicy(Policy):
+    name = "parallel_two_chunk"
+
+    def plan(self, req, pool, now):
+        L = req.prompt_len
+        base = (2 * req.rid) % (self.spec.n_prefill - 1)
+        if L >= 32:
+            l0 = L // 2
+            t_q = pool[base]
+            t0 = t_q + self.model.latency(1, 0, l0)
+            t1 = max(t0, pool[base + 1]) + self.model.latency(2, l0, L - l0)
+            return Allocation([Chunk(l0, (base,), t_q, t0),
+                               Chunk(L - l0, (base, base + 1), t0, t1)])
+        t_q = pool[base]
+        t_p = self.model.latency(1, 0, L)
+        return Allocation([Chunk(L, (base,), t_q, t_q + t_p)])
+
+
+def generate_dense(params, cfg, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        t = jnp.asarray(toks)[None]
+        pos = jnp.arange(len(toks), dtype=jnp.int32)[None]
+        logits, _, _ = forward(params, cfg, CPU_CTX, t, pos, "train")
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
+    return toks[len(prompt):]
+
+
+def engine(**kw):
+    spec = ClusterSpec(n_prefill=8, n_decode=2, sp_candidates=(1, 2, 4))
+    return ServingEngine(cfg, params, spec,
+                         ParallelTwoChunkPolicy(MODEL, spec),
+                         ctx=ctx, block_size=16, **kw)
+
+
+def check_oracle(outs, prompts, tag):
+    for i, p in enumerate(prompts):
+        want = generate_dense(params, cfg, p, len(outs[i]))
+        assert outs[i] == want, f"{tag} rid {i}: {outs[i]} != {want}"
+
+
+cfg = get_config("yi-9b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("x",))
+ctx = ExecContext(mesh=mesh, sp_axis="x", kv_split_axis="x")
+rng = np.random.default_rng(42)
+
+# ---------------------------------------------- scenario A: placed swap-in
+prompts_a = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+             for _ in range(3)]
+
+
+def run_a(preempt_at=None):
+    eng = engine(max_batch=1, max_seq=128, preempt_policy="swap",
+                 offload_model=HostOffloadModel(pcie_bw=1e8, base=0.0))
+    for i, out in enumerate((24, 18, 16)):
+        eng.submit(Request(rid=i, arrival=i * 0.005, prompt_len=64,
+                           output_len=out), prompts_a[i])
+    if preempt_at is not None:
+        eng.preempt(0, at=preempt_at)
+    return eng, eng.serve()
+
+
+calm, outs_calm = run_a()
+assert all(d.blocks.kv_shards == 4 for d in calm.dstates)
+tt = calm.reqs[0].token_times
+eng, outs = run_a(preempt_at=0.5 * (tt[5] + tt[6]))
+fab = eng.swap_stats["fabric"]
+assert fab["swap_in_placed"] >= 1, "victim must resume off-origin"
+assert eng.reqs[0].decode_instance == 1, "rid 0 must land on instance 1"
+assert eng.dstates[1].transfers.stats["ic_placed_moves"] >= 1
+assert outs == outs_calm, "placed resume diverged from the calm run"
+check_oracle(outs, prompts_a, "placed")
+print("placed swap-in on striped pools token-identical")
+
+# ------------------------------------------- scenario B: borrowed growth
+# 24-block pool, 6 per shard; two 64-token residents concentrate on one
+# instance and their second growth dips under the 8-block watermark
+# floor while the donor (whose short middle request finished) has room
+pb = [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+      for L in (64, 96, 64)]
+eng = engine(max_batch=2, max_seq=192, preempt_watermark=0.3)
+for i, (plen, out) in enumerate(((64, 30), (96, 4), (64, 30))):
+    eng.submit(Request(rid=i, arrival=i * 0.005, prompt_len=plen,
+                       output_len=out), pb[i])
+outs = eng.serve()
+assert eng.reqs[0].decode_instance == eng.reqs[2].decode_instance
+fab = eng.swap_stats["fabric"]
+assert fab["leases_out"] >= 1, "watermark shortfall must borrow"
+assert fab["leases_recalled"] == fab["leases_out"]
+assert eng.preempt_log == [], "borrowed headroom must avoid the preempt"
+assert eng.fabric.leased_blocks == 0
+for d in eng.dstates:
+    assert d.blocks.n_free == d.blocks.total_blocks and not d.blocks.leases
+check_oracle(outs, pb, "borrow")
+print("borrowed-page growth on striped pools token-identical")
+
+# -------------------------------------- scenario C: peer prefix promotion
+base = rng.integers(0, cfg.vocab_size, 104).astype(np.int32)
+twin = base.copy()
+twin[96:] = rng.integers(0, cfg.vocab_size, 8)
+
+
+def run_c(arrival):
+    eng = engine(max_batch=2, max_seq=256)
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=104, output_len=60),
+               base)
+    eng.submit(Request(rid=1, arrival=arrival, prompt_len=104,
+                       output_len=8), twin)
+    return eng, eng.serve()
+
+
+probe, _ = run_c(30.0)
+eng, outs = run_c(probe.reqs[0].token_times[2])
+fab = eng.swap_stats["fabric"]
+assert fab["peer_promotions"] >= 1, "twin must promote the peer chain"
+assert fab["peer_promoted_blocks"] >= 4
+assert eng.reqs[1].decode_instance != eng.reqs[0].decode_instance
+assert sum(c[0] for c in eng.reqs[1].chunk_plan) <= 104 - 4 * 16, \
+    "the peer chain's tokens must be skipped from the prefill plan"
+check_oracle(outs, [base, twin], "peer")
+print("peer prefix promotion across striped pools token-identical")
+
+print("DIST_OK")

@@ -27,7 +27,15 @@ def check_invariants(bm: BlockManager):
     held = [b for blocks in bm.allocs.values() for b in blocks]
     distinct = set(held)
     assert not distinct & set(free), "block both free and allocated"
-    assert bm.n_free + len(distinct) == bm.total_blocks, "block leak/drift"
+    # fabric leases are a third exclusive state: physically off the free
+    # lists, never allocated to a request, no dup across leases
+    leased = [b for bl in bm.leases.values() for b in bl]
+    assert len(leased) == len(set(leased)), "block leased twice"
+    assert not set(leased) & set(free), "block both free and leased"
+    assert not set(leased) & distinct, "block both leased and allocated"
+    assert bm.leased_blocks == len(leased)
+    assert (bm.n_free + len(distinct) + len(leased)
+            == bm.total_blocks), "block leak/drift"
     for b in distinct:
         assert bm.ref[b] == held.count(b), f"refcount drift on block {b}"
     assert set(bm.ref) == distinct, "refcount entries for dead blocks"
@@ -166,6 +174,26 @@ def apply_ops(ops, kv_shards: int = 1, kv_head_shards: int = 1):
                 assert bm.ref == ref_before, "swap round-trip touched refs"
                 assert bm.hash_of == hash_before, \
                     "swap round-trip touched hashes"
+        elif kind == 9:                                 # fabric page lease
+            if bm.leases and n % 2:
+                # recall a random active lease: its blocks return to
+                # their shards' free lists, exactly once
+                lid = sorted(bm.leases)[int(rng.integers(len(bm.leases)))]
+                before = bm.n_free
+                got = bm.recall_lease(lid)
+                assert bm.n_free == before + got, "recall miscount"
+                assert lid not in bm.leases
+            else:
+                want = 1 + n % 3
+                eff_before = bm.effective_free()
+                lid = bm.grant_lease(want)
+                if lid is None:
+                    assert not bm.can_fit(want * BS), \
+                        "lease refused despite per-shard room"
+                else:
+                    assert len(bm.leases[lid]) == want
+                    # the grant shrinks effective_free per-shard-exactly
+                    assert bm.effective_free() <= eff_before
         sync_mirror()
         if hs > 1:
             assert mirror.keys() == \
@@ -177,11 +205,14 @@ def apply_ops(ops, kv_shards: int = 1, kv_head_shards: int = 1):
     for rid in list(bm.allocs):
         bm.release(rid)
         check_invariants(bm)
+    for lid in list(bm.leases):                # drain recalls every lease
+        bm.recall_lease(lid)
+        check_invariants(bm)
     assert bm.n_free == bm.total_blocks and not bm.ref and not bm.by_hash
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_never_leak_or_double_free(ops):
@@ -189,7 +220,7 @@ def test_random_sequences_never_leak_or_double_free(ops):
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_striped_pool(ops):
@@ -201,7 +232,7 @@ def test_random_sequences_striped_pool(ops):
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_striped_pool_4way(ops):
@@ -211,7 +242,7 @@ def test_random_sequences_striped_pool_4way(ops):
 
 
 @settings(max_examples=40)
-@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5),
                           st.integers(1, 4 * BS)),
                 min_size=1, max_size=60))
 def test_random_sequences_head_sharded_pool(ops):
@@ -284,6 +315,40 @@ def test_effective_free_sees_shard_exhaustion():
         bm.release(rid)
     assert bm.n_free == bm.total_blocks
     check_invariants(bm)
+
+
+def test_lease_grant_recall_effective_free_exact():
+    """Fabric page leases on a striped pool: a grant pulls blocks off the
+    per-shard free lists balanced across the stripe (effective_free drops
+    per-shard-exactly), leased blocks are unallocatable while out, a
+    recall restores them exactly once, and a double recall raises."""
+    bm = BlockManager(total_blocks=8, block_size=4, kv_shards=2)
+    assert bm.effective_free() == 8
+    lid = bm.grant_lease(4)
+    assert lid is not None and len(bm.leases[lid]) == 4
+    assert bm.leased_blocks == 4 and bm.n_free == 4
+    # 2 blocks left per shard -> effective_free = 2 * min(2, 2)
+    assert bm.effective_free() == 4
+    assert len(bm.shard_free[0]) == len(bm.shard_free[1]) == 2
+    check_invariants(bm)
+    # the pool refuses what the leased blocks would have served
+    assert bm.can_fit(4 * 4) and not bm.can_fit(6 * 4)
+    assert bm.grant_lease(6) is None, "over-capacity lease must refuse"
+    # leased blocks cannot be handed to a request while out
+    assert bm.reserve_virtual(1, 4 * 4)
+    a = bm.commit(1)
+    assert not set(a) & set(bm.leases[lid])
+    assert bm.effective_free() == 0
+    assert bm.grant_lease(1) is None, "exhausted pool must refuse a lease"
+    check_invariants(bm)
+    got = bm.recall_lease(lid)
+    assert got == 4 and bm.leased_blocks == 0
+    assert bm.effective_free() == 4 and bm.n_free == 4
+    check_invariants(bm)
+    with pytest.raises(KeyError):
+        bm.recall_lease(lid)               # double recall must not refree
+    bm.release(1)
+    assert bm.n_free == bm.total_blocks
 
 
 def test_shared_release_keeps_sibling_blocks():

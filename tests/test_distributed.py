@@ -111,3 +111,14 @@ def test_mixed_step_distributed():
     trace token-for-token identical to the pure-serialized single-device
     oracle, with exact tick conservation."""
     _run("mixed_step_prog.py")
+
+
+def test_kv_fabric_distributed():
+    """The cluster KV memory fabric across two decode instances whose
+    paged pools are both striped over a 4-device mesh: a swap victim
+    placed onto a non-origin instance, a watermark shortfall covered by
+    pages borrowed from an idle donor (zero preemptions, every lease
+    recalled), and a peer-resident 96-token prefix chain promoted over
+    the interconnect into the prefill pool — every scenario
+    token-for-token identical to the dense oracle."""
+    _run("kv_fabric_prog.py")

@@ -1,0 +1,226 @@
+"""Cluster KV memory fabric (serving/kv_fabric.py): single-instance
+degeneration stays byte-identical to the engine-owned tiers, a swap
+victim resumes on a non-origin instance via cost-modeled placement,
+watermark shortfalls borrow headroom leases from an idle donor instead
+of preempting, and admission promotes a peer-resident prefix chain over
+the interconnect — all token-for-token identical to fabric-off runs.
+
+Lives in its own module (not test_kv_offload.py) so the per-module
+cache-clearing fixture in conftest.py gives these engine-heavy
+two-instance scenarios a fresh executable cache — appended to the
+offload module they can push a long single-process run over the jax
+0.4.x CPU backend_compile SIGSEGV cliff."""
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import HostOffloadModel
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.simulator import ClusterSpec
+from test_kv_offload import MODEL, _serve_batch
+from test_paged_engine import ParallelTwoChunkPolicy
+
+def _two_inst_engine(cfg, params, *, max_batch=2, max_seq=128,
+                     watermark=0.0, **kw):
+    spec = ClusterSpec(n_prefill=8, n_decode=2, sp_candidates=(1, 2, 4))
+    return ServingEngine(cfg, params, spec,
+                         ParallelTwoChunkPolicy(MODEL, spec),
+                         max_batch=max_batch, max_seq=max_seq,
+                         block_size=16, preempt_watermark=watermark, **kw)
+
+
+def test_fabric_off_is_byte_identical(reduced_params_cache):
+    """Single instance (fabric='auto' degenerates) and fabric='off' must
+    keep swap_stats and preempt_log byte-identical to the pre-fabric
+    engine: no 'fabric' key, same counters, same outputs."""
+    cfg, params = reduced_params_cache("yi-9b")
+    auto = _serve_batch(cfg, params, max_seq=48, preempt_policy="swap")
+    off = _serve_batch(cfg, params, max_seq=48, preempt_policy="swap",
+                       fabric="off")
+    assert not auto.fabric.cross_instance and not off.fabric.cross_instance
+    assert "fabric" not in auto.swap_stats
+    assert auto.swap_stats == off.swap_stats
+    assert auto.preempt_log == off.preempt_log and auto.preempt_log
+    assert auto.outputs == off.outputs
+    # forcing the fabric ON with one instance: placement has a single
+    # candidate, so every swap-in is pinned and the outputs are unchanged
+    on = _serve_batch(cfg, params, max_seq=48, preempt_policy="swap",
+                      fabric="on")
+    assert on.fabric.cross_instance
+    fab = on.swap_stats["fabric"]
+    assert fab["swap_in_placed"] == 0 and fab["swap_in_pinned"] >= 1
+    assert fab["leases_out"] == 0 and fab["peer_promotions"] == 0
+    assert on.outputs == off.outputs
+    with pytest.raises(ValueError, match="fabric"):
+        _serve_batch(cfg, params, max_seq=48, fabric="sideways")
+
+
+def test_fabric_places_swap_victim_on_peer_instance(reduced_params_cache):
+    """Cross-instance swap placement: a victim swapped out of a full
+    instance resumes on a DIFFERENT instance when the origin stays
+    occupied — token-for-token identical to the undisturbed run."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(31)
+    prompts = {i: rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+               for i in range(3)}
+
+    def serve(preempt_at=None):
+        # max_batch=1: one resident per instance, so placement is forced
+        # to choose between a full origin and an emptied peer
+        eng = _two_inst_engine(cfg, params, max_batch=1, max_seq=128,
+                               preempt_policy="swap",
+                               offload_model=HostOffloadModel(pcie_bw=1e8,
+                                                              base=0.0))
+        eng.submit(Request(rid=0, arrival=0.0, prompt_len=64,
+                           output_len=24), prompts[0])
+        eng.submit(Request(rid=1, arrival=0.005, prompt_len=64,
+                           output_len=18), prompts[1])
+        eng.submit(Request(rid=2, arrival=0.01, prompt_len=64,
+                           output_len=16), prompts[2])
+        if preempt_at is not None:
+            eng.preempt(0, at=preempt_at)
+        return eng, eng.serve()
+
+    calm, outs_calm = serve()
+    assert calm.reqs[0].decode_instance == 0
+    tt = calm.reqs[0].token_times
+    mid = 0.5 * (tt[5] + tt[6])            # rid 0 squarely mid-decode
+    eng, outs = serve(preempt_at=mid)
+    st_ = eng.swap_stats
+    fab = st_["fabric"]
+    assert fab["swap_in_placed"] >= 1, \
+        "the victim must resume on a non-origin instance"
+    assert fab["interconnect_bytes"] > 0
+    assert eng.reqs[0].decode_instance == 1, \
+        "rid 0 swapped out of instance 0 must land on instance 1"
+    places = eng.tracer.entries("swap_place")
+    assert places and places[0]["origin"] == 0 and places[0]["target"] == 1
+    # the landing instance's transfer books carry the interconnect move
+    assert eng.dstates[1].transfers.stats["ic_placed_moves"] >= 1
+    assert eng.dstates[1].transfers.stats["ic_placed_bytes"] > 0
+    # per-instance breakdown: the placed swap-in is instance 1's
+    pi = st_["per_instance"]
+    assert pi[1]["swap_in_placed"] >= 1 and pi[0]["swap_outs"] >= 1
+    assert sum(p["swap_ins"] for p in pi.values()) == st_["swap_ins"]
+    for rid in outs_calm:
+        assert outs[rid] == outs_calm[rid], \
+            f"rid {rid} diverged across the placed swap round trip"
+    # both pools drain; the swap accounting gauges return to baseline
+    for d, inst in zip(eng.dstates, eng.decodes):
+        assert d.blocks.n_free == d.blocks.total_blocks
+        assert inst.swapped_tokens == 0 and inst.swap_in_flight == 0
+    assert st_["swapped_now"] == 0 and st_["swap_outs"] == st_["swap_ins"]
+
+
+def test_fabric_borrow_avoids_watermark_preempt(reduced_params_cache):
+    """Page borrow/lend: an instance short of its watermark floor (but
+    not physically exhausted) borrows headroom from an idle donor
+    instead of preempting a resident — zero preemptions where the
+    fabric-off run preempts, identical outputs, and every lease is
+    recalled by the end of the trace."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(47)
+    pa = rng.integers(0, cfg.vocab_size, 60).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, 100).astype(np.int32)
+    pc = rng.integers(0, cfg.vocab_size, 60).astype(np.int32)
+
+    def serve(fabric):
+        eng = _two_inst_engine(cfg, params, max_batch=2, max_seq=128,
+                               watermark=0.3, fabric=fabric)
+        # two growing residents concentrate on instance 0 (routing sends
+        # the big middle prompt to instance 1, where it finishes fast)
+        eng.submit(Request(rid=0, arrival=0.0, prompt_len=60,
+                           output_len=30), pa)
+        eng.submit(Request(rid=1, arrival=0.005, prompt_len=100,
+                           output_len=4), pb)
+        eng.submit(Request(rid=2, arrival=0.01, prompt_len=60,
+                           output_len=30), pc)
+        return eng, eng.serve()
+
+    off, outs_off = serve("off")
+    assert off.reqs[0].decode_instance == off.reqs[2].decode_instance
+    assert off.preempt_log, \
+        "the fabric-off run must hit the watermark and preempt"
+    assert "fabric" not in off.swap_stats
+    on, outs_on = serve("auto")
+    assert on.fabric.cross_instance
+    assert on.preempt_log == [], \
+        "borrowed headroom must cover the watermark shortfall"
+    fab = on.swap_stats["fabric"]
+    assert fab["leases_out"] >= 1 and fab["lease_blocks_out"] >= 1
+    assert fab["leases_recalled"] == fab["leases_out"], \
+        "every lease must be recalled by the end of the trace"
+    assert fab["lease_blocks_recalled"] == fab["lease_blocks_out"]
+    assert on.fabric.leased_blocks == 0
+    # the donor's transfer books carry the lease handshake
+    donor = 1 - on.reqs[0].decode_instance
+    assert on.dstates[donor].transfers.stats["ic_lease_moves"] >= 1
+    pi = on.swap_stats["per_instance"]
+    assert pi[donor]["lent_blocks"] == 0, "recalled leases must zero out"
+    # registry mirror: fabric/leases_* counters and the active gauge
+    reg = on.metrics.snapshot()["counters"]
+    assert reg["fabric/leases_out"] == fab["leases_out"]
+    assert reg["fabric/leases_recalled"] == fab["leases_recalled"]
+    assert on.metrics.gauge("fabric/leases_active").value == 0
+    for rid in outs_off:
+        assert outs_on[rid] == outs_off[rid]
+    for d in on.dstates:
+        assert d.blocks.n_free == d.blocks.total_blocks
+        assert not d.blocks.leases
+
+
+def test_fabric_promotes_peer_resident_prefix(reduced_params_cache):
+    """Global prefix promotion: a request admitted to instance 1 whose
+    prompt shares a 96-token prefix with a request still RESIDENT on
+    instance 0 promotes the peer chain over the interconnect instead of
+    recomputing it — fewer prefilled tokens, identical outputs."""
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(53)
+    base = rng.integers(0, cfg.vocab_size, 104).astype(np.int32)
+    twin = base.copy()
+    twin[96:] = rng.integers(0, cfg.vocab_size, 8)   # distinct tail
+
+    def serve(fabric, arrival):
+        eng = _two_inst_engine(cfg, params, max_batch=2, max_seq=256,
+                               fabric=fabric)
+        eng.submit(Request(rid=0, arrival=0.0, prompt_len=104,
+                           output_len=60), base)
+        eng.submit(Request(rid=1, arrival=arrival, prompt_len=104,
+                           output_len=8), twin)
+        return eng, eng.serve()
+
+    # timing probe: rid 1 arrives a couple of decode ticks after rid 0
+    # became resident, so the peer chain is live for planning AND
+    # admission while rid 0 still decodes on instance 0
+    probe, _ = serve("off", 30.0)
+    early = probe.reqs[0].token_times[2]
+    off, outs_off = serve("off", early)
+    assert off.reqs[0].done > off.reqs[1].transfer_done, \
+        "rid 0 must still be resident when rid 1 is admitted"
+    assert off.reqs[1].decode_instance != off.reqs[0].decode_instance
+    on, outs_on = serve("auto", early)
+    fab = on.swap_stats["fabric"]
+    assert fab["peer_promotions"] >= 1, \
+        "admission must promote the peer-resident chain"
+    assert fab["peer_promoted_blocks"] >= 4
+    assert fab["interconnect_bytes"] > 0
+    src = on.reqs[0].decode_instance
+    assert on.reqs[1].decode_instance != src
+    # the move is booked on the SOURCE instance's transfer books — the
+    # promotion lands in the prefill pool, which keeps none of its own
+    assert on.dstates[src].transfers.stats["ic_peer_promote_moves"] >= 1
+    assert on.dstates[src].transfers.stats["ic_peer_promote_bytes"] > 0
+    assert on.swap_stats["per_instance"][src]["peer_promotions_src"] >= 1
+    # the promoted prefix never re-enters prefill: rid 1 plans fewer
+    # chunk tokens than the fabric-off run recomputes
+    planned_on = sum(c[0] for c in on.reqs[1].chunk_plan)
+    planned_off = sum(c[0] for c in off.reqs[1].chunk_plan)
+    assert planned_on <= planned_off - 4 * 16, \
+        "the peer chain's tokens must be skipped from the prefill plan"
+    assert on.planner_promotions >= 4
+    for rid in outs_off:
+        assert outs_on[rid] == outs_off[rid], \
+            f"rid {rid} diverged across a peer prefix promotion"
+
+

@@ -321,7 +321,40 @@ def test_host_prefix_cache_lru_and_verification():
     assert pool.n_free == 2 and len(cache) == 0
 
 
-# --------------------------------------------- second-tier prefix survival
+# ------------------------------------------------- preempt queue congestion
+def test_preempt_policy_queue_depth_crossover():
+    """The destination queue-depth term must be exactly additive on the
+    swap side and flip the verdict at a synthetic crossover: a long
+    prefix that swaps when the destination is idle recomputes when its
+    resident batch would make the victim's first token back wait."""
+    off = HostOffloadModel(pcie_bw=1e9, base=0.0)
+    pm = PrefillLatencyModel({1: SPCoeffs(a=0.0, b=1e-7, c=0.0, d=1e-8)})
+    bs, bpt = 16, 1024.0
+    L = 100_000
+    nb = L // bs
+    pol0, swap0, rec0 = choose_preempt_policy(nb, bs, bpt, L, pm, off)
+    assert pol0 == "swap" and swap0 < rec0
+    # an idle destination pays nothing regardless of the tick price
+    _, swap_idle, _ = choose_preempt_policy(nb, bs, bpt, L, pm, off,
+                                            queue_depth=0, queue_ms=5.0)
+    assert swap_idle == swap0
+    # depth x modeled tick: the smallest depth past the crossover flips
+    tick_ms = 5.0
+    depth = int(np.ceil((rec0 - swap0) / tick_ms)) + 1
+    pol1, swap1, rec1 = choose_preempt_policy(nb, bs, bpt, L, pm, off,
+                                              queue_depth=depth,
+                                              queue_ms=tick_ms)
+    assert swap1 == swap0 + depth * tick_ms, "queue term must be additive"
+    assert rec1 == rec0, "congestion must not touch the recompute side"
+    assert pol1 == "recompute"
+    # one step below the crossover still swaps
+    below = int((rec0 - swap0) // tick_ms) - 1
+    pol2, _, _ = choose_preempt_policy(nb, bs, bpt, L, pm, off,
+                                       queue_depth=max(below, 0),
+                                       queue_ms=tick_ms)
+    assert pol2 == "swap"
+
+
 def test_host_prefix_cache_hit_after_eviction(reduced_params_cache):
     """Prefix sharing must survive eviction: request A finishes and its
     hash-published blocks demote to the host tier; a twin B arriving

@@ -369,6 +369,79 @@ def test_engine_run_rollups_equal_sum_of_parts(traced_pressure_run):
         assert reg is not None
         g = eng.metrics.gauge(f"decode{did}/free_blocks").value
         assert g == d.blocks.n_free
+    # single instance: the cluster fabric is dormant and must publish
+    # NOTHING — no fabric/* metrics, no fabric keys in swap_stats
+    assert not any(k.startswith("fabric/") for k in reg)
+    assert "fabric" not in ss and "per_instance" not in ss
+
+
+@pytest.fixture(scope="module")
+def traced_fabric_run(reduced_params_cache):
+    """A two-instance run whose swap victim resumes on a non-origin
+    instance: instance 0's victim is manually swap-preempted while a
+    third request takes its place, so the fabric places the resume on
+    the emptied instance 1 (see test_kv_offload for the scenario's
+    block arithmetic)."""
+    from repro.core.latency_model import HostOffloadModel
+    from repro.serving.engine import ServingEngine
+    cfg, params = reduced_params_cache("yi-9b")
+    rng = np.random.default_rng(31)
+    prompts = {i: rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+               for i in range(3)}
+
+    def serve(preempt_at=None):
+        spec = ClusterSpec(n_prefill=8, n_decode=2,
+                           sp_candidates=(1, 2, 4))
+        eng = ServingEngine(cfg, params, spec, _TwoChunkPolicy(MODEL, spec),
+                            max_batch=1, max_seq=128, block_size=16,
+                            preempt_policy="swap",
+                            offload_model=HostOffloadModel(pcie_bw=1e8,
+                                                           base=0.0))
+        for i, out in enumerate((24, 18, 16)):
+            eng.submit(Request(rid=i, arrival=i * 0.005, prompt_len=64,
+                               output_len=out), prompts[i])
+        if preempt_at is not None:
+            eng.preempt(0, at=preempt_at)
+        return eng, eng.serve()
+
+    calm, _ = serve()
+    tt = calm.reqs[0].token_times
+    eng, out = serve(preempt_at=0.5 * (tt[5] + tt[6]))
+    return eng, out
+
+
+def test_fabric_counters_equal_engine_logs(traced_fabric_run):
+    """Fabric rollup audit: the fabric/* registry counters, the
+    swap_stats['fabric'] rollup, the per-instance breakdown, the tracer's
+    swap_place entries and the TransferManagers' interconnect books must
+    all agree — one placement story, told four ways."""
+    eng, _ = traced_fabric_run
+    ss = eng.swap_stats
+    fab = ss["fabric"]
+    reg = eng.metrics.snapshot()["counters"]
+    assert fab["swap_in_placed"] >= 1, "fixture must place a swap-in"
+    # registry counters mirror the fabric rollup exactly
+    for key in ("swap_in_placed", "swap_in_pinned", "leases_out",
+                "leases_recalled", "peer_promotions",
+                "interconnect_bytes"):
+        assert reg.get(f"fabric/{key}", 0) == fab[key], key
+    # the tracer's placement entries ARE the placed count
+    assert len(eng.tracer.entries("swap_place")) == fab["swap_in_placed"]
+    # every swap-in is either placed or pinned; per-instance sums match
+    assert fab["swap_in_placed"] + fab["swap_in_pinned"] == ss["swap_ins"]
+    pi = ss["per_instance"]
+    assert sum(p["swap_ins"] for p in pi.values()) == ss["swap_ins"]
+    assert sum(p["swap_outs"] for p in pi.values()) == ss["swap_outs"]
+    assert sum(p["swap_in_placed"]
+               for p in pi.values()) == fab["swap_in_placed"]
+    # interconnect bytes: Σ per-instance transfer books == fabric rollup
+    ic = sum(d.transfers.stats["ic_placed_bytes"]
+             + d.transfers.stats["ic_peer_promote_bytes"]
+             + d.transfers.stats["ic_lease_bytes"] for d in eng.dstates)
+    assert ic == fab["interconnect_bytes"]
+    # lease gauge: nothing outstanding at the end of the trace
+    assert eng.metrics.gauge("fabric/leases_active").value \
+        == eng.fabric.leased_blocks == 0
 
 
 def test_engine_run_trace_doc_export(tmp_path, traced_pressure_run):
